@@ -1,0 +1,26 @@
+"""Paper Fig 11(a-e): speed-up, alpha overlap, CPF, FPC, %-of-peak ladders."""
+
+from repro.core import pe_model as pm
+
+
+def rows():
+    out = []
+    for ae in pm.AE_ORDER:
+        for n in pm.SIZES:
+            us = pm.latency_cycles(n, ae) / pm.CLOCK_HZ * 1e6
+            out.append((
+                f"fig11_{ae}_n{n}",
+                round(us, 2),
+                f"speedup_vs_AE0={pm.speedup_over_base(n, ae):.2f};"
+                f"alpha={pm.alpha_overlap(n, ae):.3f};"
+                f"cpf={pm.cpf(n, ae):.3f};fpc={pm.fpc(n, ae):.3f};"
+                f"pct_peak_fpc={pm.pct_peak_fpc(n, ae):.1f}",
+            ))
+    # the paper's headline routine efficiencies (S5 summary)
+    for routine in ("dgemm", "dgemv", "ddot"):
+        out.append((
+            f"fig11_routine_{routine}",
+            0.0,
+            f"pct_peak_at_AE5={pm.routine_pct_peak(routine):.1f}",
+        ))
+    return out

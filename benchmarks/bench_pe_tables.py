@@ -1,0 +1,20 @@
+"""Paper Tables 4-9: PE enhancement-ladder latencies (model vs published)."""
+
+from repro.core import pe_model as pm
+
+
+def rows():
+    out = []
+    for ae in pm.AE_ORDER:
+        for n, pub in zip(pm.SIZES, pm.PUBLISHED_LATENCY[ae]):
+            model = pm.latency_cycles(n, ae)
+            err = 100.0 * (model - pub) / pub
+            # "us_per_call": modelled PE wall time at 0.2 GHz, microseconds
+            us = model / pm.CLOCK_HZ * 1e6
+            out.append((
+                f"pe_table_{ae}_n{n}",
+                round(us, 2),
+                f"model_cycles={model:.0f};published={pub};err_pct={err:+.2f};"
+                f"cpf={pm.cpf(n, ae):.3f};gflops_w={pm.gflops_per_watt(n, ae):.2f}",
+            ))
+    return out

@@ -1,0 +1,38 @@
+"""Deliverable (g): the per-(arch x shape x mesh) roofline table, read from
+the dry-run results (results/dryrun/*.json)."""
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def rows():
+    out = []
+    if not RESULTS.exists():
+        return [("roofline_missing", 0.0, "run: python -m repro.launch.dryrun")]
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        name = f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}"
+        if "__" in f.stem.split("pod")[-1]:
+            name += "_" + f.stem.split("__")[-1]
+        if d.get("status") == "skipped":
+            out.append((name, 0.0, "SKIPPED:" + d.get("reason", "")))
+            continue
+        if d.get("cost_l0") is None:
+            # memory-only lowering (multi-pod pass): cost fields are not
+            # scan-corrected there; report the fits proof only
+            out.append((name, 0.0,
+                        f"memonly;mem_gib={d['peak_mem_bytes']/2**30:.1f};"
+                        f"fits16g={d.get('fits_16g')}"))
+            continue
+        out.append((
+            name,
+            round(d["step_time_s"] * 1e6, 1),
+            f"bottleneck={d['bottleneck']};t_comp_ms={d['t_compute_s']*1e3:.2f};"
+            f"t_mem_ms={d['t_memory_s']*1e3:.2f};t_coll_ms={d['t_collective_s']*1e3:.2f};"
+            f"useful_flops_ratio={d['useful_flops_ratio']:.2f};"
+            f"roofline_frac={d['roofline_fraction']:.3f};"
+            f"mem_gib={d['peak_mem_bytes']/2**30:.1f};fits16g={d.get('fits_16g')}",
+        ))
+    return out

@@ -1,0 +1,62 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from results/dryrun.
+
+    PYTHONPATH=src:. python -m benchmarks.render_experiments > /tmp/tables.md
+"""
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def _fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def load(tag_filter=None):
+    cells = []
+    for f in sorted(RESULTS.glob("*.json")):
+        parts = f.stem.split("__")
+        tag = parts[3] if len(parts) > 3 else ""
+        if (tag_filter or "") != tag:
+            continue
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def dryrun_table():
+    rows = ["| arch | shape | mesh | compile | per-chip mem (GiB) | fits 16G | microbatches |",
+            "|---|---|---|---|---|---|---|"]
+    for d in load():
+        if d.get("status") == "skipped":
+            rows.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | skip | — |")
+            continue
+        c = d["compile_s"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {c['memory']}+{c['cost']}s "
+            f"| {_fmt_bytes(d['peak_mem_bytes'])} | {'Y' if d.get('fits_16g') else '**N**'} "
+            f"| {d['microbatches']} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table():
+    rows = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bottleneck | useful | roofline |",
+            "|---|---|---|---|---|---|---|---|"]
+    for d in load():
+        if d.get("status") == "skipped" or d["mesh"] != "pod16x16":
+            continue
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['t_compute_s']*1e3:.1f} "
+            f"| {d['t_memory_s']*1e3:.1f} | {d['t_collective_s']*1e3:.1f} "
+            f"| {d['bottleneck']} | {d['useful_flops_ratio']:.2f} "
+            f"| {d['roofline_fraction']:.1%} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print("### Dry-run table\n")
+    print(dryrun_table())
+    print("\n### Roofline table (single-pod)\n")
+    print(roofline_table())

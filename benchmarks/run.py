@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure + roofline/kernels.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement)."""
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_pe_tables",       # paper Tables 4-9
+    "benchmarks.bench_fig11",           # paper Fig 11 (CPF/FPC/%peak/alpha)
+    "benchmarks.bench_fig12",           # paper Fig 12 (tile scaling)
+    "benchmarks.bench_fig2_offtheshelf",  # paper Fig 2 (host measurement)
+    "benchmarks.bench_kernels",         # BLAS timings + BlockSpec table
+    "benchmarks.bench_roofline",        # deliverable (g) roofline table
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on module name")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.rows():
+                print(f"{name},{us},{derived}")
+        except Exception:
+            failed.append(modname)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched serving example: prefill + greedy decode with slot recycling.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch paligemma-3b
+"""
+
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen1.5-7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve(args.arch, "smoke", args.requests, args.batch, args.prompt_len, args.gen)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: BLAS algorithm-architecture co-design (Merchant et al. 2016) on JAX/TPU."""
+
+__version__ = "1.0.0"

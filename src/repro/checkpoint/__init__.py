@@ -1,0 +1,2 @@
+"""Checkpointing: atomic sharded save/restore with elastic re-shard."""
+from repro.checkpoint.manager import latest_step, restore, retain, save  # noqa: F401

@@ -1,0 +1,135 @@
+"""Sharded checkpointing with atomic manifests and elastic restore.
+
+Fault-tolerance contract (tested in tests/test_checkpoint.py):
+  - atomic: a checkpoint directory appears only after its manifest is fully
+    written (write to `<step>.tmp/`, fsync, os.replace to `<step>/`) — a
+    crash mid-save can never leave a half-readable "latest" checkpoint;
+  - bit-exact resume: restore + continue == uninterrupted run (the data
+    pipeline is (seed, step)-deterministic, so the composition is exact);
+  - elastic: arrays are stored with their LOGICAL shapes; restore takes the
+    target shardings and uses jax.device_put to lay them out on whatever
+    mesh the restarted job has — a 256-chip checkpoint restores onto 512
+    chips (or 8 test devices) unchanged;
+  - retention: keep the newest `keep` checkpoints, delete older ones only
+    after the new save is durable.
+
+On a real multi-host deployment each host writes only its addressable
+shards (jax.experimental.multihost_utils / array_serialization); this
+single-process implementation writes the full logical arrays but keeps the
+same on-disk layout (one .npy per leaf + manifest) so the format is
+forward-compatible.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}/{k}" if prefix else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def _unflatten_into(template, flat: dict):
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}/{k}" if prefix else str(k), v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            vals = [walk(f"{prefix}/{i}", v) for i, v in enumerate(node)]
+            return type(node)(vals)
+        return flat[prefix]
+
+    return walk("", template)
+
+
+def save(ckpt_dir: str | os.PathLike, step: int, state) -> Path:
+    """Atomically save `state` (pytree of arrays) as checkpoint `step`."""
+    root = Path(ckpt_dir)
+    root.mkdir(parents=True, exist_ok=True)
+    tmp = root / f"step_{step:08d}.tmp"
+    final = root / f"step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat = _flatten(state)
+    manifest = {"step": step, "leaves": {}}
+    for i, (path, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"][path] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str | os.PathLike) -> Optional[int]:
+    root = Path(ckpt_dir)
+    if not root.exists():
+        return None
+    steps = []
+    for d in root.iterdir():
+        if d.is_dir() and d.name.startswith("step_") and (d / "manifest.json").exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | os.PathLike, step: int, template,
+            shardings=None):
+    """Restore checkpoint `step` into the structure of `template`.
+
+    `shardings`: optional pytree of Sharding matching template — arrays are
+    device_put with them (elastic re-shard onto the current mesh).
+    """
+    root = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((root / "manifest.json").read_text())
+    flat_sh = _flatten(shardings) if shardings is not None else None
+    flat = {}
+    for path, info in manifest["leaves"].items():
+        arr = np.load(root / info["file"])
+        if flat_sh is not None and path in flat_sh and flat_sh[path] is not None:
+            flat[path] = jax.device_put(arr, flat_sh[path])
+        else:
+            flat[path] = jax.numpy.asarray(arr)
+    return _unflatten_into(template, flat)
+
+
+def retain(ckpt_dir: str | os.PathLike, keep: int = 3) -> None:
+    root = Path(ckpt_dir)
+    if not root.exists():
+        return
+    steps = sorted(
+        int(d.name.split("_")[1])
+        for d in root.iterdir()
+        if d.is_dir() and d.name.startswith("step_") and not d.name.endswith(".tmp")
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(root / f"step_{s:08d}", ignore_errors=True)

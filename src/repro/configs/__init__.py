@@ -1,0 +1,1 @@
+"""Per-architecture configs (exact brief numbers) + reduced smoke variants."""

@@ -1,0 +1,18 @@
+"""codeqwen1.5-7b — qwen1.5 arch: MHA with qkv-bias, SwiGLU
+[hf:Qwen/CodeQwen1.5-7B].  32L d=4096 32H kv=32 ff=13440 v=92416."""
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="codeqwen1.5-7b", family="dense",
+    d_model=4096, n_layers=32, n_heads=32, n_kv=32, d_ff=13440, vocab=92416,
+    head_dim=128, act="swiglu", norm="rms", use_bias=True,
+    rope_theta=1e6, tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    dtype="float32",
+    arch_id="codeqwen1.5-7b", family="dense",
+    d_model=64, n_layers=2, n_heads=4, n_kv=4, d_ff=128, vocab=512,
+    head_dim=16, act="swiglu", norm="rms", use_bias=True,
+    rope_theta=1e6, tie_embeddings=False, remat="none", loss_chunk=8,
+)

@@ -1,0 +1,18 @@
+"""command-r-plus-104b — dense GQA, parallel attn+FFN block, no biases
+[hf:CohereForAI/c4ai-command-r-plus].  64L d=12288 96H kv=8 ff=33792 v=256000."""
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="command-r-plus-104b", family="dense",
+    d_model=12288, n_layers=64, n_heads=96, n_kv=8, d_ff=33792, vocab=256000,
+    head_dim=128, act="swiglu", norm="ln", parallel_block=True,
+    rope_theta=75e6, tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    dtype="float32",
+    arch_id="command-r-plus-104b", family="dense",
+    d_model=96, n_layers=2, n_heads=6, n_kv=2, d_ff=192, vocab=512,
+    head_dim=16, act="swiglu", norm="ln", parallel_block=True,
+    rope_theta=75e6, tie_embeddings=True, remat="none", loss_chunk=8,
+)

@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — co-designed BLAS — as a JAX library."""
+
+from repro.core import blas, dag, pe_model, tiling  # noqa: F401
+from repro.core.blas import (  # noqa: F401
+    axpy,
+    dot,
+    einsum,
+    gemm,
+    gemv,
+    get_backend,
+    matmul,
+    nrm2,
+    scal,
+    set_backend,
+    use_backend,
+)

@@ -1,0 +1,138 @@
+"""Activation-sharding policy: with_sharding_constraint hooks for model code.
+
+GSPMD propagates parameter/input shardings well through straight-line code,
+but loses them inside nested scans under remat (observed: the chunked
+attention's saved residuals materialized with the *global* batch — 32 GiB
+buffers/device at 256 chips).  Model layers therefore pin activation
+shardings at scan boundaries through this policy object.
+
+The policy is process-global and optional: with no policy set (single-device
+smoke tests) every hook is a no-op, so model code stays mesh-agnostic.
+
+Axis vocabulary used by the hooks:
+    "dp"  — batch-like dims (data + pod axes)
+    "tp"  — head/hidden dims (model axis)
+    "sp"  — sequence dims (long-context cells shard sequence over data)
+    None  — unconstrained
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_policy(mesh, dp: Tuple[str, ...] = ("data",), tp: Optional[str] = "model",
+               sp: Optional[str] = None, seqres: Optional[str] = None,
+               cap_tp: Optional[str] = None, reduce_dtype: Optional[str] = None) -> None:
+    """seqres: axis for the residual stream's sequence dim between blocks
+    (Megatron sequence parallelism; typically 'model' for training cells).
+    cap_tp: axis for the MoE capacity dim (TP-in-expert archs only).
+    reduce_dtype: 'bfloat16' makes matmul partial-sum reductions (the TP
+    all-reduces) run in bf16 — halves TP collective bytes; per-shard MXU
+    accumulation stays f32 (hillclimb lever, EXPERIMENTS.md §Perf)."""
+    _state.policy = {"mesh": mesh, "dp": tuple(dp), "tp": tp, "sp": sp,
+                     "seqres": seqres, "cap_tp": cap_tp,
+                     "reduce_dtype": reduce_dtype}
+
+
+def clear_policy() -> None:
+    _state.policy = None
+
+
+def get_policy():
+    return getattr(_state, "policy", None)
+
+
+@contextlib.contextmanager
+def policy(mesh, dp=("data",), tp="model", sp=None, seqres=None, cap_tp=None,
+           reduce_dtype=None):
+    old = get_policy()
+    set_policy(mesh, dp, tp, sp, seqres, cap_tp, reduce_dtype)
+    try:
+        yield
+    finally:
+        _state.policy = old
+
+
+def _resolve(axis, pol):
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):  # merged dims, e.g. ("dp", "tp")
+        parts = []
+        for a in axis:
+            r = _resolve(a, pol)
+            if r is None:
+                continue
+            parts.extend(r if isinstance(r, tuple) else (r,))
+        return tuple(parts) if parts else None
+    if axis == "dp":
+        return pol["dp"] if pol["dp"] else None
+    if axis == "tp":
+        return pol["tp"]
+    if axis == "sp":
+        return pol["sp"]
+    if axis == "seqres":
+        return pol.get("seqres")
+    if axis == "cap_tp":
+        # MoE capacity dim: model axis, but only when experts could NOT take
+        # it (TP-in-expert archs); see launch/dryrun policy setup
+        return pol.get("cap_tp")
+    return axis  # raw mesh axis name
+
+
+def constrain(x, *axes):
+    """Pin x's sharding: one vocab entry per dim (pad with None).
+
+    The marker "tp?" is a FALLBACK target: it takes the tp axis only if no
+    other dim got it (e.g. attention (B,T,H,hd): heads take tp when they
+    divide it, otherwise head_dim does — MQA/few-head archs)."""
+    pol = get_policy()
+    if pol is None:
+        return x
+    fallback_dims = [i for i, a in enumerate(axes) if a == "tp?"]
+    entries = [None if a == "tp?" else _resolve(a, pol) for a in axes]
+    entries += [None] * (x.ndim - len(entries))
+    # drop axes that don't divide the dim (uneven shardings are legal but
+    # wasteful; staying unconstrained lets GSPMD choose)
+    mesh = pol["mesh"]
+
+    def fits(e, d):
+        names = e if isinstance(e, tuple) else (e,)
+        sz = 1
+        for nm in names:
+            sz *= mesh.shape[nm]
+        return sz > 1 and d % sz == 0
+
+    clean = []
+    for e, d in zip(entries, x.shape):
+        if e is None:
+            clean.append(None)
+            continue
+        clean.append(e if fits(e, d) else None)
+    tp = pol.get("tp")
+    if tp is not None and fallback_dims:
+        used = set()
+        for e in clean:
+            if e is not None:
+                used.update(e if isinstance(e, tuple) else (e,))
+        if tp not in used:
+            for i in fallback_dims:
+                if i < x.ndim and fits(tp, x.shape[i]):
+                    clean[i] = tp
+                    break
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*clean)))
+
+
+def matmul_reduce_dtype():
+    """Accumulation dtype override for blas.matmul under the current policy."""
+    pol = get_policy()
+    if pol is None:
+        return None
+    return pol.get("reduce_dtype")

@@ -1,0 +1,195 @@
+"""Level-1/2/3 BLAS as the framework's single matmul entry point.
+
+This module is the paper's contribution reified as the substrate of the whole
+framework: every model layer routes its linear algebra through these
+functions, so the co-designed blocked kernels (kernels/) are a first-class,
+globally switchable feature rather than a bolt-on.
+
+Backends
+--------
+- "xla":    jnp/lax ops with f32 accumulation (`preferred_element_type`).
+            Used for dry-runs/rooflines so `cost_analysis()` sees the FLOPs,
+            and as the fallback on non-TPU hosts.
+- "pallas": the Pallas TPU kernels in repro.kernels (VMEM-blocked, MXU-
+            aligned — the paper's PE mapped onto a TPU core).  On CPU these
+            run in interpret mode (slow; used by tests).
+- "ref":    naive pure-jnp oracles (kernels/ref.py semantics) for validation.
+
+All functions follow BLAS semantics (alpha/beta scaling, accumulate into y/C)
+but are functional: they return the result instead of mutating.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_state = threading.local()
+_VALID = ("xla", "pallas", "ref")
+
+
+def get_backend() -> str:
+    return getattr(_state, "backend", "xla")
+
+
+def set_backend(name: str) -> None:
+    if name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {name!r}")
+    _state.backend = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    old = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(old)
+
+
+def _acc_dtype(x: jnp.ndarray) -> jnp.dtype:
+    # MXU-style accumulation: low-precision inputs accumulate in f32.
+    return jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16, jnp.int8) else x.dtype
+
+
+# --------------------------------------------------------------------------
+# Level 1
+# --------------------------------------------------------------------------
+
+def dot(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """ddot: x^T y (paper Fig 3 DAG: parallel mults + log-depth add tree)."""
+    if get_backend() == "pallas":
+        from repro.kernels import ops
+        return ops.dot(x, y)
+    acc = _acc_dtype(x)
+    return jnp.sum(x.astype(acc) * y.astype(acc)).astype(x.dtype)
+
+
+def nrm2(x: jnp.ndarray) -> jnp.ndarray:
+    """dnrm2: sqrt(x^T x) — same DAG as ddot plus one sqrt (paper S4.1)."""
+    if get_backend() == "pallas":
+        from repro.kernels import ops
+        return ops.nrm2(x)
+    acc = _acc_dtype(x)
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(acc)))).astype(x.dtype)
+
+
+def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """daxpy: alpha*x + y — one fully parallel DAG level."""
+    if get_backend() == "pallas":
+        from repro.kernels import ops
+        return ops.axpy(alpha, x, y)
+    return (jnp.asarray(alpha, x.dtype) * x + y).astype(x.dtype)
+
+
+def scal(alpha, x: jnp.ndarray) -> jnp.ndarray:
+    return (jnp.asarray(alpha, x.dtype) * x).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Level 2
+# --------------------------------------------------------------------------
+
+def gemv(
+    A: jnp.ndarray,
+    x: jnp.ndarray,
+    y: Optional[jnp.ndarray] = None,
+    *,
+    alpha=1.0,
+    beta=0.0,
+    trans: bool = False,
+) -> jnp.ndarray:
+    """dgemv: y = alpha * op(A) x + beta * y (op = A or A^T)."""
+    if trans:
+        A = A.T
+    backend = get_backend()
+    if backend == "pallas":
+        from repro.kernels import ops
+        out = ops.gemv(A, x)
+    else:
+        acc = _acc_dtype(A)
+        out = jnp.dot(A, x, preferred_element_type=acc).astype(A.dtype)
+    out = scal(alpha, out)
+    if y is not None and beta != 0.0:
+        out = out + scal(beta, y)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Level 3
+# --------------------------------------------------------------------------
+
+def gemm(
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: Optional[jnp.ndarray] = None,
+    *,
+    alpha=1.0,
+    beta=0.0,
+    transpose_a: bool = False,
+    transpose_b: bool = False,
+) -> jnp.ndarray:
+    """dgemm: C = alpha * op(A) op(B) + beta * C.
+
+    2-D operands only; for the model-layer entry point with leading batch
+    dims use `matmul` below.
+    """
+    if transpose_a:
+        A = A.T
+    if transpose_b:
+        B = B.T
+    backend = get_backend()
+    if backend == "pallas":
+        from repro.kernels import ops
+        out = ops.gemm(A, B)
+    elif backend == "ref":
+        from repro.kernels import ref
+        out = ref.gemm(A, B)
+    else:
+        acc = _acc_dtype(A)
+        out = jnp.dot(A, B, preferred_element_type=acc).astype(A.dtype)
+    if alpha != 1.0:
+        out = scal(alpha, out)
+    if C is not None and beta != 0.0:
+        out = out + scal(beta, C)
+    return out
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Model-layer entry point: x (..., d) @ w (d, f) -> (..., f).
+
+    Every projection in the model zoo calls this, so switching the backend
+    switches the whole network onto the co-designed kernels.
+    """
+    backend = get_backend()
+    if backend == "pallas":
+        from repro.kernels import ops
+        lead = x.shape[:-1]
+        out = ops.gemm(x.reshape(-1, x.shape[-1]), w)
+        return out.reshape(*lead, w.shape[-1])
+    acc = _acc_dtype(x)
+    if acc == jnp.float32 and x.dtype == jnp.bfloat16:
+        from repro.core import act_sharding
+        if act_sharding.matmul_reduce_dtype() == "bfloat16":
+            # TP hillclimb: round partial sums to bf16 BEFORE the cross-shard
+            # all-reduce (per-shard MXU accumulation is f32 regardless)
+            acc = jnp.bfloat16
+    return jnp.dot(x, w, preferred_element_type=acc).astype(x.dtype)
+
+
+def einsum(subscripts: str, *operands: jnp.ndarray) -> jnp.ndarray:
+    """einsum with MXU-style f32 accumulation; used by attention/MoE layers.
+
+    The pallas backend intentionally falls through to XLA here: arbitrary
+    contractions are XLA's job; the co-designed kernels cover the named BLAS
+    patterns (gemm/gemv/dot) plus attention/scan kernels in repro.kernels.
+    """
+    acc = _acc_dtype(operands[0])
+    return jnp.einsum(subscripts, *operands, preferred_element_type=acc).astype(
+        operands[0].dtype
+    )

@@ -1,0 +1,128 @@
+"""Parallel BLAS on the mesh — the paper's S5.5 (REDEFINE tile arrays) mapped
+onto shard_map + jax.lax collectives.
+
+The paper attaches its PE to every tile of a b x b array and block-partitions
+the output matrix; speed-up approaches b^2 as the per-tile compute-to-comm
+ratio n/b grows (Fig 12).  Here the "tiles" are mesh devices and the NoC is
+ICI; the three GEMM schedules below are the classic distributed realizations,
+in increasing overlap quality:
+
+  all_gather_gemm : gather B then one local GEMM (baseline; bursty, no overlap)
+  ring_gemm       : Cannon-style — B circulates via collective_permute while
+                    the matching A-panel matmul runs; XLA overlaps the permute
+                    DMA with the MXU work.  This is the paper's AE5
+                    (prefetch next block while computing) at mesh scale.
+  psum_gemm       : k-sharded partial products + one all-reduce (SUMMA-
+                    reduce); right schedule when k is the sharded dim.
+
+All take/return *global* arrays under jit-with-mesh; shard_map declares the
+per-device views.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def all_gather_gemm(a, b, mesh, axis: str = "model"):
+    """a: (m, k) row-sharded over axis; b: (k, n) row-sharded over axis.
+    Gathers B (the (p-1)/p bytes the roofline charges) then one local GEMM.
+    Output row-sharded like A."""
+
+    def body(a_loc, b_loc):
+        b_full = jax.lax.all_gather(b_loc, axis, tiled=True)
+        return jnp.dot(a_loc, b_full, preferred_element_type=jnp.float32).astype(a_loc.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None)),
+        out_specs=P(axis, None),
+        check_rep=False,
+    )(a, b)
+
+
+def ring_gemm(a, b, mesh, axis: str = "model"):
+    """Cannon ring: same sharding contract as all_gather_gemm, but B moves
+    one hop per step while the previous panel's matmul runs (compute/comm
+    overlap — the paper's prefetch enhancement, AE5)."""
+    p = mesh.shape[axis]
+
+    def body(a_loc, b_loc):
+        # a_loc: (m/p, k); b_loc: (k/p, n).  Panel j of A pairs with the
+        # B-shard that started on device j.
+        idx = jax.lax.axis_index(axis)
+        kb = b_loc.shape[0]
+        perm = [(i, (i - 1) % p) for i in range(p)]  # shift towards lower idx
+
+        def step(i, carry):
+            acc, b_cur = carry
+            j = (idx + i) % p
+            a_panel = jax.lax.dynamic_slice_in_dim(a_loc, j * kb, kb, axis=1)
+            acc = acc + jnp.dot(a_panel, b_cur, preferred_element_type=jnp.float32)
+            b_nxt = jax.lax.ppermute(b_cur, axis, perm)
+            return acc, b_nxt
+
+        acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), jnp.float32)
+        acc, _ = jax.lax.fori_loop(0, p, step, (acc, b_loc))
+        return acc.astype(a_loc.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None)),
+        out_specs=P(axis, None),
+        check_rep=False,
+    )(a, b)
+
+
+def psum_gemm(a, b, mesh, axis: str = "model"):
+    """a: (m, k) col-sharded; b: (k, n) row-sharded -> partial products +
+    all-reduce.  Output replicated over axis."""
+
+    def body(a_loc, b_loc):
+        part = jnp.dot(a_loc, b_loc, preferred_element_type=jnp.float32)
+        return jax.lax.psum(part, axis).astype(a_loc.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None)),
+        out_specs=P(None, None),
+        check_rep=False,
+    )(a, b)
+
+
+def block_parallel_gemm(a, b, mesh, row_axis: str = "data", col_axis: str = "model"):
+    """2D SUMMA: C block-partitioned over (row_axis x col_axis) — literally
+    the paper's output-block-per-tile partition (each REDEFINE tile owns an
+    (n/b x n/b) block of C).  A panels broadcast along rows, B panels along
+    columns, local GEMM per step."""
+    pr, pc = mesh.shape[row_axis], mesh.shape[col_axis]
+
+    def body(a_loc, b_loc):
+        # a_loc: (m/pr, k/pc); b_loc: (k/pr, n/pc)
+        def step(j, acc):
+            a_panel = _bcast(a_loc, col_axis, j)        # (m/pr, k/pc) from col j
+            b_panel = _bcast(b_loc, row_axis, j)        # (k/pr, n/pc) from row j
+            return acc + jnp.dot(a_panel, b_panel, preferred_element_type=jnp.float32)
+
+        def _bcast(x, axis, j):
+            # broadcast device j's shard along `axis` (all-gather + select:
+            # compiles to a collective-broadcast pattern)
+            g = jax.lax.all_gather(x, axis)             # (p, ...)
+            return g[j]
+
+        steps = pc  # == pr panels along k
+        acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), jnp.float32)
+        acc = jax.lax.fori_loop(0, steps, step, acc)
+        return acc.astype(a_loc.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(row_axis, col_axis), P(row_axis, col_axis)),
+        out_specs=P(row_axis, col_axis),
+        check_rep=False,
+    )(a, b)

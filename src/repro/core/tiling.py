@@ -1,0 +1,148 @@
+"""Block-partition logic: the paper's 4x4 register blocking adapted to TPU tiles.
+
+The paper (S4.3.5) blocks GEMM into 4x4 register-resident tiles because the PE
+has 64 FP registers (3*n^2 registers for an n-block => n=4).  On TPU the same
+argument runs against VMEM and the MXU: tiles must be multiples of the
+(8 sublane x 128 lane) vector registers, matmul tiles multiples of 128 on the
+contracting/output dims to fill the 128x128 systolic array, and the working
+set  bm*bk + bk*bn + bm*bn (+ f32 accumulator)  must fit the VMEM budget.
+
+`choose_block_shape` is the AE4 analog ("bandwidth increase"): for a fixed
+VMEM budget it picks the aspect ratio that maximises arithmetic intensity
+(flops per HBM byte), exactly the paper's argument for widening the
+FPS<->load-store path to the full block width.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+
+# TPU v5e-class constants (targets; the container is CPU-only).
+MXU_DIM = 128          # systolic array edge
+SUBLANE = 8            # f32 sublane count; bf16 packs 16
+VMEM_BYTES = 128 * 1024 * 1024  # per-core VMEM (v5e ~128 MiB usable is optimistic; budget below)
+DEFAULT_VMEM_BUDGET = 96 * 1024 * 1024  # leave headroom for semaphores/double buffers
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def pad_dim_to(x: jnp.ndarray, axis: int, multiple: int):
+    """Zero-pad `axis` of x up to a multiple.  Returns (padded, original_size).
+
+    This is the TPU replacement for the paper's DOT2/DOT3 RDP reconfiguration:
+    instead of reconfiguring the datapath for residual (non multiple-of-4)
+    fringes, we pad to the hardware tile and slice the result back.
+    """
+    size = x.shape[axis]
+    target = round_up(size, multiple)
+    if target == size:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad), size
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockShape:
+    bm: int
+    bn: int
+    bk: int
+
+    @property
+    def vmem_bytes_f32_acc(self) -> int:
+        # A + B tiles (double buffered by the pipeline) + f32 accumulator + out
+        return 2 * (self.bm * self.bk + self.bk * self.bn) * 2 + (
+            self.bm * self.bn * 4 + self.bm * self.bn * 2
+        )
+
+    def arithmetic_intensity(self) -> float:
+        """flops per byte moved HBM->VMEM for one grid step (bf16 operands)."""
+        flops = 2 * self.bm * self.bn * self.bk
+        bytes_moved = (self.bm * self.bk + self.bk * self.bn) * 2
+        return flops / bytes_moved
+
+
+def choose_block_shape(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    dtype_bytes: int = 2,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    candidates: Sequence[int] = (128, 256, 512, 1024, 2048),
+) -> BlockShape:
+    """Pick an MXU-aligned block shape maximizing arithmetic intensity.
+
+    Mirrors the paper's AE4 reasoning: bigger blocks amortise the per-block
+    handshake (here: DMA issue) and raise flops/byte; the ceiling is local
+    memory (here: VMEM, incl. the double buffer the Pallas pipeline inserts).
+    """
+    best = None
+    best_ai = -1.0
+    for bm in candidates:
+        if bm > round_up(m, MXU_DIM):
+            continue
+        for bn in candidates:
+            if bn > round_up(n, MXU_DIM):
+                continue
+            for bk in candidates:
+                if bk > round_up(k, MXU_DIM):
+                    continue
+                # double-buffered A,B + f32 acc + out tile
+                vmem = (
+                    2 * (bm * bk + bk * bn) * dtype_bytes
+                    + bm * bn * 4
+                    + bm * bn * dtype_bytes
+                )
+                if vmem > vmem_budget:
+                    continue
+                ai = (2 * bm * bn * bk) / ((bm * bk + bk * bn) * dtype_bytes)
+                # tie-break: prefer fewer k-steps (less accumulator traffic)
+                if ai > best_ai or (ai == best_ai and best and bk > best.bk):
+                    best_ai = ai
+                    best = BlockShape(bm, bn, bk)
+    if best is None:  # tiny problem: single MXU tile
+        best = BlockShape(MXU_DIM, MXU_DIM, MXU_DIM)
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPlan:
+    """A fully-specified blocked-GEMM execution plan (paper's Algorithm 3)."""
+
+    m: int
+    n: int
+    k: int
+    block: BlockShape
+
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        return (cdiv(self.m, self.block.bm), cdiv(self.n, self.block.bn), cdiv(self.k, self.block.bk))
+
+    @property
+    def padded(self) -> tuple[int, int, int]:
+        g = self.grid
+        return (g[0] * self.block.bm, g[1] * self.block.bn, g[2] * self.block.bk)
+
+    @property
+    def num_block_matmuls(self) -> int:
+        g = self.grid
+        return g[0] * g[1] * g[2]
+
+    def pad_waste_fraction(self) -> float:
+        pm, pn, pk = self.padded
+        return 1.0 - (self.m * self.n * self.k) / (pm * pn * pk)
+
+
+def plan_gemm(m: int, n: int, k: int, **kw) -> GridPlan:
+    return GridPlan(m, n, k, choose_block_shape(m, n, k, **kw))

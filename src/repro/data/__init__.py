@@ -1,0 +1,2 @@
+"""Data substrate: deterministic synthetic pipeline + prefetch."""
+from repro.data.pipeline import Prefetcher, SyntheticLM  # noqa: F401

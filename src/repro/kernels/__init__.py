@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot-spots + scan kernels.
+
+Layout: <name>.py holds the pl.pallas_call + BlockSpec kernel, ops.py the
+jit'd public wrappers (padding, block selection, interpret fallback),
+ref.py the pure-jnp oracles that tests sweep against.
+"""

@@ -1,0 +1,120 @@
+"""Flash-style blocked attention Pallas kernel.
+
+This is the paper's blocking insight carried beyond BLAS: attention is two
+chained GEMMs whose intermediate (the score matrix) never needs to exist in
+HBM.  Exactly like the GEMM kernel keeps its f32 accumulator tile resident in
+VMEM across the k sweep (AE5), this kernel keeps the online-softmax running
+statistics (m, l) and the output accumulator resident across the key sweep,
+so HBM traffic is O(T*D) instead of O(T^2).
+
+Causal masking uses decode-style alignment: the query block sits at the END
+of the key range (offset = Tk - Tq), which serves both training (Tq == Tk)
+and single-step decode (Tq == 1) with one kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, nk: int, bq: int, bk: int, scale: float, causal: bool, offset: int,
+):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal block culling (paper AE3 analog: skip whole-block work/DMAs that
+    # the dependency structure proves dead).
+    first_k = ik * bk
+    last_q = iq * bq + bq - 1 + offset
+    visible = (not causal) or (first_k <= last_q)
+
+    @pl.when(visible)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                    # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                   # (bq, bk)
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offset
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                                 # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                              # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                     # (bq, 1)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def attention(
+    q: jnp.ndarray,  # (BH, Tq, D)
+    k: jnp.ndarray,  # (BH, Tk, D)
+    v: jnp.ndarray,  # (BH, Tk, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, tq, d = q.shape
+    _, tk, _ = k.shape
+    if scale is None:
+        scale = d ** -0.5
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    assert tq % block_q == 0 and tk % block_k == 0, ((tq, tk), (block_q, block_k))
+    grid = (bh, tq // block_q, tk // block_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        nk=grid[2],
+        bq=block_q,
+        bk=block_k,
+        scale=scale,
+        causal=causal,
+        offset=tk - tq,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,82 @@
+"""Blocked GEMM Pallas kernel — the paper's PE mapped onto a TPU core.
+
+Co-design correspondence (DESIGN.md S2):
+  - 4x4 register block        -> (bm, bn, bk) MXU-aligned VMEM tiles
+  - DOT4 fused datapath (AE2) -> `jnp.dot(..., preferred_element_type=f32)`
+                                 feeding the 128x128 systolic MXU
+  - LM + Load-Store CFU (AE1) -> BlockSpec-declared HBM->VMEM tiles
+  - block load/store (AE3)    -> whole-tile DMAs (one descriptor per tile)
+  - 4x bandwidth (AE4)        -> block aspect ratio from core.tiling
+  - prefetch (AE5)            -> Pallas grid pipelining double-buffers the
+                                 next (i, j, k) tiles while the MXU runs;
+                                 k is innermost ("arbitrary") so the f32
+                                 accumulator tile stays resident in VMEM.
+
+The kernel accumulates in an f32 VMEM scratch tile and writes the output
+tile once on the last k step — the accumulate-move the paper counts as its
+third n^3 flop term happens entirely inside VMEM, never touching HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm(
+    a: jnp.ndarray,  # (m, k)
+    b: jnp.ndarray,  # (k, n)
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C = A @ B with explicit VMEM tiling.  Dims must divide the blocks
+    (ops.gemm pads first — the paper's DOT2/DOT3 fringe handling)."""
+    m, ka = a.shape
+    kb, n = b.shape
+    assert ka == kb, (a.shape, b.shape)
+    block_m, block_n, block_k = (min(block_m, m), min(block_n, n), min(block_k, ka))
+    assert m % block_m == 0 and n % block_n == 0 and ka % block_k == 0, (
+        (m, n, ka),
+        (block_m, block_n, block_k),
+    )
+    grid = (m // block_m, n // block_n, ka // block_k)
+    kernel = functools.partial(_gemm_kernel, nk=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype or a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,65 @@
+"""Blocked GEMV Pallas kernel (the paper's bandwidth-bound 40%-of-peak case).
+
+GEMV has O(1) reuse — every A element is touched once — so the kernel's only
+job is to stream A tiles through VMEM at full HBM bandwidth while the VPU
+does the multiply-accumulate (using the MXU for a rank-1-output matmul would
+waste 127/128 of the systolic array; the paper makes the same observation
+when its DOT4 utilization collapses for DGEMV).  The row-block accumulator
+lives in an f32 VMEM scratch across the n-sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref, acc_ref, *, nn: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)          # (bm, bn)
+    x = x_ref[...].astype(jnp.float32)          # (1, bn)
+    acc_ref[...] += jnp.sum(a * x, axis=1, keepdims=True)  # (bm, 1)
+
+    @pl.when(j == nn - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemv(
+    a: jnp.ndarray,  # (m, n)
+    x: jnp.ndarray,  # (n,)
+    *,
+    block_m: int = 512,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, n = a.shape
+    block_m, block_n = min(block_m, m), min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0, ((m, n), (block_m, block_n))
+    grid = (m // block_m, n // block_n)
+    kernel = functools.partial(_gemv_kernel, nn=grid[1])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, 1), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, x[None, :])
+    return out[:, 0]

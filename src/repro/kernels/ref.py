@@ -1,0 +1,147 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth: naive, allocation-heavy, obviously
+correct.  Kernel tests sweep shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _acc(x):
+    return jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype
+
+
+# --------------------------------------------------------------------------
+# BLAS
+# --------------------------------------------------------------------------
+
+def dot(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(x.astype(_acc(x)) * y.astype(_acc(x))).astype(x.dtype)
+
+
+def nrm2(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(_acc(x))))).astype(x.dtype)
+
+
+def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return (jnp.asarray(alpha, x.dtype) * x + y).astype(x.dtype)
+
+
+def gemv(A: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(A, x, preferred_element_type=_acc(A)).astype(A.dtype)
+
+
+def gemm(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(A, B, preferred_element_type=_acc(A)).astype(A.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (flash oracle: full-materialization softmax attention)
+# --------------------------------------------------------------------------
+
+def attention(
+    q: jnp.ndarray,  # (BH, Tq, D)
+    k: jnp.ndarray,  # (BH, Tk, D)
+    v: jnp.ndarray,  # (BH, Tk, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        tq, tk = q.shape[1], k.shape[1]
+        # decode-style alignment: query block sits at the END of the kv range
+        mask = jnp.tril(jnp.ones((tq, tk), bool), k=tk - tq)
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# RWKV6 "Finch" WKV recurrence (data-dependent per-channel decay)
+# --------------------------------------------------------------------------
+
+def rwkv6(
+    r: jnp.ndarray,      # (BH, T, K) receptance
+    k: jnp.ndarray,      # (BH, T, K) key
+    v: jnp.ndarray,      # (BH, T, V) value
+    w_log: jnp.ndarray,  # (BH, T, K) log-decay, <= 0  (w = exp(w_log) in (0, 1])
+    u: jnp.ndarray,      # (BH, K)    per-channel "bonus" for the current token
+    s0: jnp.ndarray | None = None,  # (BH, K, V) initial state
+):
+    """Token-by-token oracle of the WKV6 recurrence.
+
+        y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(exp(w_log_t)) S_{t-1} + k_t v_t^T
+
+    Returns (y, s_final) with y (BH, T, V), s_final (BH, K, V), f32 math.
+    """
+    bh, t, kk = r.shape
+    vv = v.shape[-1]
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = w_log.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((bh, kk, vv), jnp.float32)
+
+    def step(s, inputs):
+        rt, kt, vt, wt = inputs  # (BH,K),(BH,K),(BH,V),(BH,K)
+        kv = kt[:, :, None] * vt[:, None, :]                      # (BH,K,V)
+        yt = jnp.einsum("bk,bkv->bv", rt, s + uf[:, :, None] * kv)
+        s = jnp.exp(wt)[:, :, None] * s + kv
+        return s, yt
+
+    xs = (
+        jnp.moveaxis(rf, 1, 0),
+        jnp.moveaxis(kf, 1, 0),
+        jnp.moveaxis(vf, 1, 0),
+        jnp.moveaxis(wf, 1, 0),
+    )
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_fin
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD recurrence (scalar-per-head decay)
+# --------------------------------------------------------------------------
+
+def ssd(
+    x: jnp.ndarray,       # (BH, T, P)  head inputs
+    a_log: jnp.ndarray,   # (BH, T)     log-decay per step, <= 0
+    b: jnp.ndarray,       # (BH, T, N)  input projection (state dim N)
+    c: jnp.ndarray,       # (BH, T, N)  output projection
+    h0: jnp.ndarray | None = None,  # (BH, N, P)
+):
+    """Token-by-token oracle of the Mamba2 SSD recurrence.
+
+        H_t = exp(a_log_t) H_{t-1} + b_t x_t^T
+        y_t = c_t^T H_t
+
+    Returns (y, h_final) with y (BH, T, P).
+    """
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    xf, bf, cf = (z.astype(jnp.float32) for z in (x, b, c))
+    af = a_log.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bh, n, p), jnp.float32)
+
+    def step(h, inputs):
+        xt, at, bt, ct = inputs
+        h = jnp.exp(at)[:, None, None] * h + bt[:, :, None] * xt[:, None, :]
+        yt = jnp.einsum("bn,bnp->bp", ct, h)
+        return h, yt
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(af, 1, 0),
+        jnp.moveaxis(bf, 1, 0),
+        jnp.moveaxis(cf, 1, 0),
+    )
+    h_fin, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_fin

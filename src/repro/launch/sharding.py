@@ -1,0 +1,251 @@
+"""Path/shape-based sharding rules: params, optimizer state, batches, caches.
+
+Strategy (DESIGN.md S3):
+  - 2D weight sharding: residual (d_model) dim over "data", hidden/head dim
+    over "model" (Megatron col/row pattern inferred from which side touches
+    d_model).  Keeps per-chip weight bytes flat up to 314B params.
+  - MoE experts over "model" when E divides it (moonshot 64e), otherwise
+    TP inside experts (grok 8e): (E, d, f) -> (None, "data", "model").
+  - Optimizer state (m/v/master) additionally shards over the full DP axes
+    (ZeRO-1); XLA materializes the gather on use.
+  - KV caches: batch over DP axes when divisible, else sequence over "data"
+    (long_500k, batch=1); kv-heads over "model" when divisible, else head_dim
+    over "model" (GQA kv=8 < 16).
+  - Small tensors (< SMALL elements per layer) replicate — collective cost
+    of sharding them exceeds the memory win.
+
+Every rule guards on divisibility: a dim only gets an axis if the axis size
+divides it (GSPMD could pad, but unpadded layouts keep memory analysis
+honest).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.launch.mesh import axis_size, dp_axes
+
+SMALL = 1 << 18  # 262144 elements
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+def _maybe(mesh, axis, dim: int):
+    """axis name if it divides dim, else None.  axis may be a tuple."""
+    if isinstance(axis, tuple):
+        if not axis:
+            return None
+        sz = int(np.prod([axis_size(mesh, a) for a in axis]))
+    else:
+        sz = axis_size(mesh, axis)
+    return axis if sz > 1 and dim % sz == 0 else None
+
+
+def param_spec(path: str, shape: tuple, cfg: ModelConfig, mesh) -> P:
+    """PartitionSpec for one param leaf (shape includes any layer-stack dim)."""
+    stacked = any(seg in path for seg in ("layers/", "shared_lora/"))
+    eff = shape[1:] if stacked else shape
+    name = path.rsplit("/", 1)[-1]
+
+    def wrap(*spec):
+        return P(*((None,) + spec)) if stacked else P(*spec)
+
+    if getattr(cfg, "mesh_strategy", "2d") == "dp":
+        # pure DP: weights replicated (ZeRO shards the optimizer state)
+        return wrap(*([None] * len(eff)))
+
+    if len(eff) <= 1 or int(np.prod(eff)) < SMALL:
+        return wrap(*([None] * len(eff)))
+
+    d = cfg.d_model
+    if len(eff) == 3:  # stacked experts (E, a, b)
+        e, a, b = eff
+        if cfg.moe is not None and e == cfg.moe.num_experts:
+            if _maybe(mesh, "model", e):
+                # EP: experts over model; residual dim over data
+                sa = _maybe(mesh, "data", a) if a == d else None
+                sb = _maybe(mesh, "data", b) if b == d else None
+                return wrap("model", sa, sb)
+            # TP inside experts
+            if a == d:
+                return wrap(None, _maybe(mesh, "data", a), _maybe(mesh, "model", b))
+            return wrap(None, _maybe(mesh, "model", a), _maybe(mesh, "data", b))
+        # other 3D (e.g. LoRA stacks): shard the d_model-sized dim over data
+        return wrap(None, _maybe(mesh, "data", a) if a == d else None, None)
+
+    if len(eff) == 2:
+        a, b = eff
+        # square (d, d) projections are ambiguous by shape alone: output
+        # projections (row-parallel) are identified by name
+        row_named = name in ("wo", "w_down", "out_proj", "w_o")
+        if a == d and b != d and not row_named:  # column-parallel: (d, hidden)
+            return wrap(_maybe(mesh, "data", a), _maybe(mesh, "model", b))
+        if b == d and (row_named or a != d):     # row-parallel: (hidden, d) — incl. embed (V, d)
+            return wrap(_maybe(mesh, "model", a), _maybe(mesh, "data", b))
+        return wrap(_maybe(mesh, "data", a), _maybe(mesh, "model", b))
+
+    return wrap(*([None] * len(eff)))
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh):
+    """Pytree of PartitionSpec for a params pytree (arrays or SDS)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_path_str(path), leaf.shape, cfg, mesh),
+        params_shape,
+    )
+
+
+SERVE_RESIDENT_BUDGET = 8 * 1024 ** 3  # bytes/chip of TP-resident weights
+
+
+def param_specs_serve(params_shape, cfg: ModelConfig, mesh):
+    """Serving-time weight sharding.
+
+    Decode is latency-bound with no batch to amortize FSDP-style gathers, so
+    when the whole model fits TP-resident (params/|model| under budget) the
+    'data'-dim sharding is dropped: weights live sharded over 'model' only
+    and no per-step weight collectives exist.  Archs over budget (command-r,
+    grok) keep the 2D layout — quantified in EXPERIMENTS.md §Roofline.
+    """
+    dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+    total = cfg.param_count() * dtype_bytes
+    if total / axis_size(mesh, "model") > SERVE_RESIDENT_BUDGET:
+        return param_specs(params_shape, cfg, mesh)
+
+    def drop_data(path, leaf):
+        ps = param_spec(_path_str(path), leaf.shape, cfg, mesh)
+        entries = []
+        for e in list(ps) + [None] * (len(leaf.shape) - len(ps)):
+            if e == "data":
+                entries.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(a for a in e if a != "data")
+                entries.append(kept if kept else None)
+            else:
+                entries.append(e)
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(drop_data, params_shape)
+
+
+def opt_state_specs(params_shape, cfg: ModelConfig, mesh):
+    """ZeRO-1: m/v/master get the param spec with dim0 additionally sharded
+    over remaining DP axes where divisible (under the 'dp' strategy this
+    includes 'model', fully sharding the optimizer)."""
+    dp = data_axes_for(cfg, mesh)
+
+    def zero_spec(path, leaf):
+        ps = param_spec(_path_str(path), leaf.shape, cfg, mesh)
+        entries = list(ps) + [None] * (len(leaf.shape) - len(ps))
+        used = set()
+        for e in entries:
+            if e is None:
+                continue
+            used.update(e if isinstance(e, tuple) else (e,))
+        for a in dp:
+            if a in used:
+                continue
+            for i, dim in enumerate(leaf.shape):
+                cur = entries[i]
+                cur_t = () if cur is None else (cur if isinstance(cur, tuple) else (cur,))
+                cand = cur_t + (a,)
+                sz = int(np.prod([axis_size(mesh, x) for x in cand]))
+                if dim % sz == 0 and dim >= sz:
+                    entries[i] = cand if len(cand) > 1 else cand[0]
+                    used.add(a)
+                    break
+        return P(*entries)
+
+    mv = jax.tree_util.tree_map_with_path(zero_spec, params_shape)
+    return {"m": mv, "v": mv, "master": mv, "count": P()}
+
+
+# --------------------------------------------------------------------------
+# Batch / cache specs
+# --------------------------------------------------------------------------
+
+def data_axes_for(cfg: ModelConfig, mesh) -> tuple:
+    """DP axes under the cfg's mesh strategy ('dp' strategy folds 'model' in)."""
+    dp = dp_axes(mesh)
+    if getattr(cfg, "mesh_strategy", "2d") == "dp":
+        dp = dp + ("model",)
+    return dp
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh) -> dict:
+    dp = data_axes_for(cfg, mesh)
+    dpsz = int(np.prod([axis_size(mesh, a) for a in dp]))
+    bspec = dp if cell.global_batch % dpsz == 0 else None
+    out = {"tokens": P(bspec, None)}
+    if cell.kind == "train":
+        out["labels"] = P(bspec, None)
+    if cfg.family == "vlm" and cell.kind != "decode":
+        out["patches"] = P(bspec, None, None)
+    if cfg.family == "audio" and cell.kind != "decode":
+        out["frames"] = P(bspec, None, None)
+    return out
+
+
+def cache_specs(cache_shape, cfg: ModelConfig, cell: ShapeCell, mesh):
+    """Specs for the decode-cache pytree (built from eval_shape of init_cache)."""
+    dp = data_axes_for(cfg, mesh)
+    dpsz = int(np.prod([axis_size(mesh, a) for a in dp]))
+    batch_ok = cell.global_batch % dpsz == 0
+    bspec = dp if batch_ok else None
+    kv_heads_ok = cfg.n_kv % axis_size(mesh, "model") == 0
+    hd_ok = cfg.hd % axis_size(mesh, "model") == 0
+    # when the batch can't cover the DP axes (long_500k, B=1) shard the cache
+    # sequence dim over "data" instead; caches are allocated at block-rounded
+    # max_len so divisibility holds.
+    seq_spec = None if batch_ok else "data"
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        if p == "pos" or nd == 0:
+            return P()
+        if (p in ("k", "v") or p.endswith("/k") or p.endswith("/v")
+                or p.endswith("k_scale") or p.endswith("v_scale")):
+            # (L|occ, B, S, kv, hd|1)
+            kv_s = "model" if kv_heads_ok else None
+            hd_s = None if kv_heads_ok else ("model" if hd_ok else None)
+            if leaf.shape[-1] == 1:
+                hd_s = None
+            return P(None, bspec, seq_spec, kv_s, hd_s)
+        if p == "enc":  # (B, F, d)
+            return P(bspec, None, None)
+        if p.endswith("tm/s"):  # (L, B, H, K, V)
+            h_s = _maybe(mesh, "model", cfg.d_model // cfg.rwkv.head_dim)
+            return P(None, bspec, h_s, None, None)
+        if p.endswith("x_prev"):  # (L, B, d)
+            return P(None, bspec, None)
+        if p.endswith("mamba/conv"):  # (L, B, K-1, C)
+            return P(None, bspec, None, None)
+        if p.endswith("mamba/h"):  # (L, B, nh, N, P)
+            s = cfg.ssm
+            nh = s.expansion * cfg.d_model // s.head_dim
+            return P(None, bspec, _maybe(mesh, "model", nh), None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+`input_specs(cfg, cell)` returns the batch pytree for the cell's step kind;
+`state_specs(cfg)` / `cache_spec(cfg, cell)` build the train-state and
+decode-cache shape trees via jax.eval_shape — nothing is materialized, which
+is what lets 314B-param configs lower on a CPU host.
+
+Modality frontends are STUBS per the brief: the vlm cell feeds precomputed
+patch embeddings, the audio cell precomputed frame embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, t = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        return {"tokens": SDS((b, 1), jnp.int32)}
+    out = {"tokens": SDS((b, t), jnp.int32)}
+    if cell.kind == "train":
+        out["labels"] = SDS((b, t), jnp.int32)
+    if cfg.family == "vlm":
+        # patches are part of the sequence budget: text = t - n_prefix
+        out["tokens"] = SDS((b, t - cfg.n_prefix), jnp.int32)
+        if cell.kind == "train":
+            out["labels"] = SDS((b, t - cfg.n_prefix), jnp.int32)
+        out["patches"] = SDS((b, cfg.n_prefix, cfg.d_model), cfg.jdtype)
+    if cfg.family == "audio":
+        out["frames"] = SDS((b, cfg.encoder.n_frames, cfg.d_model), cfg.jdtype)
+    return out
+
+
+def params_spec(cfg: ModelConfig):
+    return jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def state_spec(cfg: ModelConfig, optcfg=None):
+    p = params_spec(cfg)
+    opt = jax.eval_shape(lambda q: adamw.init(q, optcfg), p)
+    return {"params": p, "opt": opt}
+
+
+def cache_spec(cfg: ModelConfig, cell: ShapeCell):
+    enc = cfg.encoder.n_frames if cfg.family == "audio" else 0
+    return jax.eval_shape(
+        lambda: tf.init_cache(cfg, cell.global_batch, cell.seq_len, enc_frames=enc)
+    )

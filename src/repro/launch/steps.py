@@ -1,0 +1,83 @@
+"""Step-function builders: the jit targets for training and serving."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, optcfg: adamw.AdamWConfig, microbatches: int = 1):  # noqa: C901
+    """Training step with microbatch gradient accumulation.
+
+    Accumulation bounds activation memory: the remat'd backward holds the
+    stacked layer carries for one microbatch only (B_local/microbatches rows).
+    The f32 accumulation buffer is sharded exactly like the params, so it
+    adds only params_bytes*4/chips per device.
+    """
+
+    def loss_fn(params, batch):
+        return tf.lm_loss(params, batch, cfg)
+
+    def train_step(state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            acc_dt = jnp.float32 if optcfg.accum_dtype == "float32" else jnp.bfloat16
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), state["params"]
+            )
+
+            def acc_step(carry, mbatch):
+                tot, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(state["params"], mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(acc_dt), g_acc, g
+                )
+                return (tot + l, g_acc), None
+
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.zeros(()), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt, metrics = adamw.update(grads, state["opt"], state["params"], optcfg)
+        return {"params": new_params, "opt": new_opt}, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        logits, cache = tf.prefill(params, batch, cache, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One greedy decode step: (params, token (B,1), cache) -> (token, cache).
+    Jit with donate_argnums=(2,) so the cache updates in place."""
+
+    def serve_step(params, token, cache):
+        logits, cache = tf.decode_step(params, token, cache, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        return tf.lm_loss(params, batch, cfg)
+
+    return eval_step

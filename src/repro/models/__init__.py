@@ -1,0 +1,1 @@
+"""Model zoo: all matmuls route through repro.core.blas."""

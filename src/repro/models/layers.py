@@ -1,0 +1,379 @@
+"""Shared transformer layers.  Every projection routes through core.blas.
+
+All layers are functional: params are nested dicts of jnp arrays, so they
+stack cleanly along a leading layer axis for lax.scan and shard via the
+path->PartitionSpec rules in launch/sharding.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blas
+from repro.core.act_sharding import constrain
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(d: int, kind: str = "rms", dtype=jnp.bfloat16):
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), dtype)}  # stored as (1+scale) offset form
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(params: dict, x: jnp.ndarray, kind: str = "rms") -> jnp.ndarray:
+    if kind == "rms":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., T, H, hd); positions: (..., T) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA; memory-safe chunked softmax; optional prefix-LM mask)
+# --------------------------------------------------------------------------
+
+def repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, T, nkv, hd) -> (B, T, nkv*groups, hd)."""
+    if groups == 1:
+        return k
+    b, t, nk, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, nk, groups, hd)).reshape(
+        b, t, nk * groups, hd
+    )
+
+
+def _attend_block(q, k, v, qpos, kpos, causal: bool, prefix_len):
+    """q (B,Tq,H,hd), k/v (B,Tk,H,hd) -> scores softmaxed in f32, out (B,Tq,H,hd).
+
+    Used for a single query chunk against a key range; builds the (Tq, Tk)
+    score block only.
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    if causal:
+        m = qpos[:, None] >= kpos[None, :]
+        if prefix_len is not None:
+            m = m | (kpos[None, :] < prefix_len)
+        s = jnp.where(m[None, None], s, -1e30)
+    return s
+
+
+def attention_core(
+    q: jnp.ndarray,  # (B, Tq, H, hd)
+    k: jnp.ndarray,  # (B, Tk, H, hd)  (already GQA-expanded)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    prefix_len: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: Optional[jnp.ndarray] = None,  # decode: absolute pos of q[0]
+    full_scores: bool = False,
+) -> jnp.ndarray:
+    """Flash-style attention in pure JAX: lax.scan over q chunks with an inner
+    scan over kv chunks keeping online-softmax stats.  Never materializes the
+    (Tq, Tk) score matrix — required for the 32k/500k shape cells.
+    """
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    offset = q_offset if q_offset is not None else jnp.asarray(tk - tq, jnp.int32)
+
+    if full_scores or tq * tk <= 4096 * 1024:  # small: single block, simplest HLO
+        qpos = jnp.arange(tq, dtype=jnp.int32) + offset
+        kpos = jnp.arange(tk, dtype=jnp.int32)
+        s = _attend_block(q, k, v, qpos, kpos, causal, prefix_len)
+        s = constrain(s, "dp", "tp", None, None)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum(
+            "bhqk,bkhd->bqhd", p, v.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ).astype(q.dtype)
+
+    qc = min(q_chunk, tq)
+    while tq % qc:   # largest divisor <= q_chunk (cross-attn: tk=1500 etc.)
+        qc -= 1
+    kc = min(kv_chunk, tk)
+    while tk % kc:
+        kc -= 1
+    nq, nk = tq // qc, tk // kc
+    scale = hd ** -0.5
+    kpos_all = jnp.arange(tk, dtype=jnp.int32).reshape(nk, kc)
+    k_blocks = constrain(k.reshape(b, nk, kc, h, hd), "dp", None, None, "tp", "tp?")
+    v_blocks = constrain(v.reshape(b, nk, kc, h, hd), "dp", None, None, "tp", "tp?")
+
+    def q_step(_, q_in):
+        qi, qblk = q_in  # index, (B, qc, H, hd)
+        qpos = qi * qc + jnp.arange(qc, dtype=jnp.int32) + offset
+        qf = qblk.astype(jnp.float32) * scale
+
+        def kv_step(carry, kv_in):
+            m_run, l_run, acc = carry
+            ki, kblk, vblk, kpos = kv_in
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qf, kblk.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            if causal:
+                mask = qpos[:, None] >= kpos[None, :]
+                if prefix_len is not None:
+                    mask = mask | (kpos[None, :] < prefix_len)
+                s = jnp.where(mask[None, None], s, -1e30)
+            s = constrain(s, "dp", "tp", None, None)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m_run - m_new)
+            l_new = alpha * l_run + jnp.sum(p, axis=-1, keepdims=True)
+            acc = alpha[..., 0][..., None] * acc + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc), None
+
+        init = (
+            constrain(jnp.full((b, h, qc, 1), -1e30, jnp.float32), "dp", "tp"),
+            constrain(jnp.zeros((b, h, qc, 1), jnp.float32), "dp", "tp"),
+            constrain(jnp.zeros((b, h, qc, hd), jnp.float32), "dp", "tp", None, "tp?"),
+        )
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step,
+            init,
+            (
+                jnp.arange(nk, dtype=jnp.int32),
+                jnp.moveaxis(k_blocks, 1, 0),
+                jnp.moveaxis(v_blocks, 1, 0),
+                kpos_all,
+            ),
+        )
+        out = (acc / l_f).astype(q.dtype)  # (B, H, qc, hd)
+        return None, constrain(jnp.moveaxis(out, 1, 2), "dp", None, "tp", "tp?")
+
+    q_xs = constrain(
+        jnp.moveaxis(q.reshape(b, nq, qc, h, hd), 1, 0), None, "dp", None, "tp", "tp?"
+    )
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq, dtype=jnp.int32), q_xs))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, tq, h, hd)
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    use_bias: bool = False
+    causal: bool = True
+    use_rope: bool = True
+    qk_norm: bool = False
+    full_scores: bool = False  # dry-run cost mode: skip chunked scans
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.bfloat16) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * std).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, kv * hd)) * std).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, kv * hd)) * std).astype(dtype),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * std).astype(dtype),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def attention_layer(
+    params: dict,
+    x: jnp.ndarray,  # (B, T, d)
+    cfg: AttnConfig,
+    *,
+    positions: jnp.ndarray,          # (T,) absolute positions of x tokens
+    cache: Optional[dict] = None,    # {"k": (B, S, kv, hd), "v": ..., "pos": scalar}
+    prefix_len: Optional[int] = None,
+):
+    """Returns (out, new_cache).  With a cache, x is the new-token block
+    (decode: T == 1) appended at cache["pos"]."""
+    b, t, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+
+    q = blas.matmul(x, params["wq"])
+    k = blas.matmul(x, params["wk"])
+    v = blas.matmul(x, params["wv"])
+    if cfg.use_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = constrain(q.reshape(b, t, h, hd), "dp", None, "tp", "tp?")
+    k = constrain(k.reshape(b, t, kv, hd), "dp", None, "tp", "tp?")
+    v = constrain(v.reshape(b, t, kv, hd), "dp", None, "tp", "tp?")
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        pos = cache["pos"]
+        if cache["k"].dtype == jnp.int8:
+            # int8 KV cache: symmetric per-(token, head) quantization.
+            # Halves the decode-cell HBM/memory roofline term (§Perf).
+            def quant(z):
+                scale = jnp.max(jnp.abs(z.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+                q = jnp.round(z.astype(jnp.float32) / jnp.maximum(scale, 1e-9))
+                return jnp.clip(q, -127, 127).astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+            kq, ks_ = quant(k)
+            vq, vs_ = quant(v)
+            ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0))
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks_, (0, pos, 0, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs_, (0, pos, 0, 0))
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs, "pos": pos + t}
+            k_full = (ck.astype(jnp.float32) * cks.astype(jnp.float32)).astype(x.dtype)
+            v_full = (cv.astype(jnp.float32) * cvs.astype(jnp.float32)).astype(x.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            new_cache = {"k": ck, "v": cv, "pos": pos + t}
+            k_full, v_full = ck, cv
+        q_offset = pos
+    else:
+        k_full, v_full = k, v
+        q_offset = None
+
+    groups = h // kv
+    k_full = repeat_kv(k_full, groups)
+    v_full = repeat_kv(v_full, groups)
+    out = attention_core(
+        q, k_full, v_full,
+        causal=cfg.causal, prefix_len=prefix_len, q_offset=q_offset,
+        full_scores=cfg.full_scores,
+    )
+    out = blas.matmul(out.reshape(b, t, h * hd), params["wo"])
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, kind: str = "swiglu", dtype=jnp.bfloat16, use_bias=False) -> dict:
+    ks = jax.random.split(key, 3)
+    std = d ** -0.5
+    if kind in ("swiglu", "geglu"):
+        p = {
+            "w_gate": (jax.random.normal(ks[0], (d, d_ff)) * std).astype(dtype),
+            "w_up": (jax.random.normal(ks[1], (d, d_ff)) * std).astype(dtype),
+            "w_down": (jax.random.normal(ks[2], (d_ff, d)) * (d_ff ** -0.5)).astype(dtype),
+        }
+    else:  # gelu / relu two-matrix MLP
+        p = {
+            "w_up": (jax.random.normal(ks[0], (d, d_ff)) * std).astype(dtype),
+            "w_down": (jax.random.normal(ks[1], (d_ff, d)) * (d_ff ** -0.5)).astype(dtype),
+        }
+        if use_bias:
+            p["b_up"] = jnp.zeros((d_ff,), dtype)
+            p["b_down"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp(params: dict, x: jnp.ndarray, kind: str = "swiglu") -> jnp.ndarray:
+    if kind == "swiglu":
+        gate = jax.nn.silu(blas.matmul(x, params["w_gate"]).astype(jnp.float32))
+        up = blas.matmul(x, params["w_up"]).astype(jnp.float32)
+        mid = constrain((gate * up).astype(x.dtype), "dp", None, "tp")
+        return blas.matmul(mid, params["w_down"])
+    if kind == "geglu":
+        gate = jax.nn.gelu(blas.matmul(x, params["w_gate"]).astype(jnp.float32), approximate=True)
+        up = blas.matmul(x, params["w_up"]).astype(jnp.float32)
+        mid = constrain((gate * up).astype(x.dtype), "dp", None, "tp")
+        return blas.matmul(mid, params["w_down"])
+    # plain gelu MLP (whisper-style, with bias)
+    hdn = blas.matmul(x, params["w_up"])
+    if "b_up" in params:
+        hdn = hdn + params["b_up"]
+    hdn = jax.nn.gelu(hdn.astype(jnp.float32), approximate=True).astype(x.dtype)
+    out = blas.matmul(hdn, params["w_down"])
+    if "b_down" in params:
+        out = out + params["b_down"]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Embedding / head
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * (d ** -0.5)).astype(dtype)}
+
+
+def embed(params: dict, tokens: jnp.ndarray, scale: bool = False) -> jnp.ndarray:
+    out = jnp.take(params["table"], tokens, axis=0)
+    if scale:
+        out = out * jnp.asarray(math.sqrt(out.shape[-1]), out.dtype)
+    return out
+
+
+def unembed(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied head: logits = x @ table^T (f32 accumulate)."""
+    return jnp.einsum(
+        "btd,vd->btv", x, params["table"], preferred_element_type=jnp.float32
+    )
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """logits (B, T, V) f32, labels (B, T) int32 -> scalar mean loss."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

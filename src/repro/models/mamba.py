@@ -1,0 +1,167 @@
+"""Mamba2 SSD blocks and the Zamba2 hybrid assembly helpers.
+
+The SSD recurrence runs through the chunked pure-JAX path below (same math
+as kernels/mamba2.py) on the XLA backend; single-token decode uses the exact
+recurrence against a carried (H, N, P) state + a (K-1)-deep conv state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import blas
+from repro.core.act_sharding import constrain
+from repro.models import layers
+
+
+# --------------------------------------------------------------------------
+# Chunked SSD in pure JAX (mirrors kernels/mamba2.py)
+# --------------------------------------------------------------------------
+
+def ssd_chunked(x, a_log, b, c, h0=None, chunk: int = 64, unroll: bool = False):
+    """x (BH,T,P), a_log (BH,T), b/c (BH,T,N) -> (y (BH,T,P), h (BH,N,P))."""
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    ck = min(chunk, t)
+    pad = (-t) % ck
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad)))
+    nc = x.shape[1] // ck
+    shp3 = lambda z: constrain(
+        jnp.moveaxis(z.reshape(bh, nc, ck, -1), 1, 0).astype(jnp.float32),
+        None, ("dp", "tp"), None, None,
+    )
+    xs, bs, cs = shp3(x), shp3(b), shp3(c)
+    as_ = jnp.moveaxis(a_log.reshape(bh, nc, ck), 1, 0).astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bh, n, p), jnp.float32)
+    mask = jnp.tril(jnp.ones((ck, ck), jnp.float32))
+
+    def body(h, inp):
+        xc, ac, bc, cc = inp
+        L = jnp.cumsum(ac, axis=1)                       # (BH, C)
+        y = jnp.exp(L)[:, :, None] * jnp.einsum(
+            "bcn,bnp->bcp", cc, h, preferred_element_type=jnp.float32
+        )
+        E = L[:, :, None] - L[:, None, :]                # (BH, C, C)
+        A = jnp.einsum("btn,bsn->bts", cc, bc, preferred_element_type=jnp.float32)
+        A = A * jnp.exp(jnp.minimum(E, 0.0)) * mask
+        y += jnp.einsum("bts,bsp->btp", A, xc, preferred_element_type=jnp.float32)
+        l_last = L[:, -1]
+        b_sc = bc * jnp.exp(l_last[:, None] - L)[:, :, None]
+        h = jnp.exp(l_last)[:, None, None] * h + jnp.einsum(
+            "bcn,bcp->bnp", b_sc, xc, preferred_element_type=jnp.float32
+        )
+        return h, y
+
+    h_fin, ys = jax.lax.scan(
+        body, constrain(h0.astype(jnp.float32), ("dp", "tp"), None, None), (xs, as_, bs, cs),
+        unroll=True if unroll else 1,
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bh, nc * ck, p)[:, :t]
+    return y.astype(x.dtype), h_fin
+
+
+def ssd_step(x, a_log, b, c, h):
+    """Single token: x (BH,P), a_log (BH,), b/c (BH,N), h (BH,N,P)."""
+    xf, bf, cf = (z.astype(jnp.float32) for z in (x, b, c))
+    h = jnp.exp(a_log.astype(jnp.float32))[:, None, None] * h + bf[:, :, None] * xf[:, None, :]
+    y = jnp.einsum("bn,bnp->bp", cf, h)
+    return y.astype(x.dtype), h
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expansion * cfg.d_model
+    nh = d_in // s.head_dim
+    d_xbc = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, d_xbc
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    s, d_in, nh, d_xbc = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    return {
+        "norm": layers.init_norm(d, "rms", dtype),
+        "in_proj": (jax.random.normal(ks[0], (d, d_in + d_xbc + nh)) * std).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_kernel, d_xbc)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((d_xbc,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm": layers.init_norm(d_in, "rms", dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_in, d)) * (d_in ** -0.5)).astype(dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv1d.  x (B,T,C), w (K,C).  Returns (y, new_state)."""
+    k = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k)) + b
+    return y, xp[:, -(k - 1) :, :]
+
+
+def mamba_block(params, x, cfg: ModelConfig, state=None):
+    """x (B,T,d).  state {"conv": (B,K-1,d_xbc), "h": (B,NH,N,P)} or None."""
+    s, d_in, nh, d_xbc = _dims(cfg)
+    b_, t, d = x.shape
+    g, n, p = s.n_groups, s.d_state, s.head_dim
+
+    h_in = layers.apply_norm(params["norm"], x, "rms")
+    zxbcdt = blas.matmul(h_in, params["in_proj"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, d_in + d_xbc], axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, conv_new = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xin, bmat, cmat = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,T,NH)
+    a_log = -jnp.exp(params["a_log"])[None, None, :] * dt                 # <= 0
+
+    # head layout: (B,T,NH,P) -> (B*NH, T, P); B/C shared across heads per group
+    xh = jnp.moveaxis(xin.reshape(b_, t, nh, p), 2, 1).reshape(b_ * nh, t, p)
+    xh = xh * jnp.moveaxis(dt, 2, 1).reshape(b_ * nh, t)[..., None].astype(xh.dtype)
+    heads_per_g = nh // g
+    expand = lambda m: jnp.moveaxis(
+        jnp.broadcast_to(
+            m.reshape(b_, t, g, 1, n), (b_, t, g, heads_per_g, n)
+        ).reshape(b_, t, nh, n),
+        2, 1,
+    ).reshape(b_ * nh, t, n)
+    bh_, ch_ = expand(bmat), expand(cmat)
+    ah = jnp.moveaxis(a_log, 2, 1).reshape(b_ * nh, t)
+
+    h0 = state["h"].reshape(b_ * nh, n, p).astype(jnp.float32) if state is not None else None
+    if t == 1 and state is not None:
+        y, h_fin = ssd_step(xh[:, 0], ah[:, 0], bh_[:, 0], ch_[:, 0], h0)
+        y = y[:, None, :]
+    else:
+        y, h_fin = ssd_chunked(xh, ah, bh_, ch_, h0=h0, chunk=s.chunk, unroll=cfg.scan_unroll)
+
+    y = jnp.moveaxis(y.reshape(b_, nh, t, p), 1, 2)                 # (B,T,NH,P)
+    y = y + params["d_skip"][None, None, :, None].astype(y.dtype) * jnp.moveaxis(
+        xh.reshape(b_, nh, t, p), 1, 2
+    )
+    y = y.reshape(b_, t, d_in)
+    y = layers.rms_norm(
+        (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+        params["gate_norm"]["scale"],
+    )
+    out = blas.matmul(y, params["out_proj"])
+    new_state = {"conv": conv_new, "h": h_fin.reshape(b_, nh, n, p)}
+    return x + out, new_state

@@ -1,0 +1,166 @@
+"""Top-k MoE layer with two dispatch strategies.
+
+- "einsum": GShard-style capacity dispatch via one-hot einsums.  This is the
+  classic, compile-friendly baseline, but the dispatch/combine einsums cost
+  O(B*T*E*C*d) flops — visible in the roofline as compute-term waste (the
+  MODEL_FLOPS/HLO_FLOPs ratio exposes it).
+- "gather": sorted dispatch — tokens are argsorted by expert, gathered into
+  (E, C, d) buffers, run through per-expert GEMMs, and scatter-added back.
+  Same semantics at equal capacity, but dispatch cost drops to O(E*C*d)
+  memory ops.  This is the beyond-paper optimization used in the MoE
+  hillclimb (EXPERIMENTS.md §Perf).
+
+Expert weights are stacked on a leading E axis so sharding rules can place
+experts on the mesh (EP) or shard d_ff within experts (TP), per arch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core import blas
+from repro.core.act_sharding import constrain
+
+
+def init_moe(key, d: int, mcfg: MoEConfig, act: str, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 5)
+    e, f = mcfg.num_experts, mcfg.d_ff_expert
+    std = d ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * std).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * std).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * std).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * (f ** -0.5)).astype(dtype),
+    }
+    if mcfg.n_shared_experts:
+        fs = f * mcfg.n_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(kk[0], (d, fs)) * std).astype(dtype),
+            "w_up": (jax.random.normal(kk[1], (d, fs)) * std).astype(dtype),
+            "w_down": (jax.random.normal(kk[2], (fs, d)) * (fs ** -0.5)).astype(dtype),
+        }
+    return p
+
+
+def _expert_ffn(h, params, act: str):
+    """h: (..., E-leading layout, d) batched per-expert swiglu."""
+    gate = jnp.einsum("e...d,edf->e...f", h, params["w_gate"], preferred_element_type=jnp.float32)
+    up = jnp.einsum("e...d,edf->e...f", h, params["w_up"], preferred_element_type=jnp.float32)
+    actf = jax.nn.silu if act == "swiglu" else (lambda z: jax.nn.gelu(z, approximate=True))
+    mid = (actf(gate) * up).astype(h.dtype)
+    return jnp.einsum("e...f,efd->e...d", mid, params["w_down"], preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def _route(params, x, mcfg: MoEConfig):
+    """Returns (top_w (B,T,K) f32 normalized, top_i (B,T,K) int32, aux_loss)."""
+    logits = jnp.einsum(
+        "btd,de->bte", x.astype(jnp.float32), params["router"],
+        preferred_element_type=jnp.float32,
+    )
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(gates, mcfg.top_k)
+    top_w = top_w / jnp.clip(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    e = mcfg.num_experts
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+    ) / mcfg.top_k
+    prob = jnp.mean(gates, axis=(0, 1))
+    aux = e * jnp.sum(frac * prob) * mcfg.router_aux_weight
+    return top_w, top_i, aux
+
+
+def _capacity(t: int, mcfg: MoEConfig) -> int:
+    c = int(t * mcfg.top_k / mcfg.num_experts * mcfg.capacity_factor)
+    return max(8, ((c + 3) // 4) * 4)
+
+
+def moe_einsum(params: dict, x: jnp.ndarray, mcfg: MoEConfig, act: str):
+    """GShard capacity dispatch.  x (B, T, d) -> (y, aux_loss)."""
+    b, t, d = x.shape
+    e, k = mcfg.num_experts, mcfg.top_k
+    c = _capacity(t, mcfg)
+    top_w, top_i, aux = _route(params, x, mcfg)
+
+    oh = jax.nn.one_hot(top_i, e, dtype=jnp.float32)          # (B,T,K,E)
+    flat = oh.reshape(b, t * k, e)                            # priority: token order, then slot
+    pos = jnp.cumsum(flat, axis=1) - flat                     # zero-based slot per expert
+    keep = (pos < c) * flat                                   # drop overflow
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), c, dtype=jnp.float32) * keep[..., None]
+    combine = (top_w.reshape(b, t * k)[:, :, None, None] * slot_oh).reshape(b, t, k, e, c).sum(2)
+    dispatch = (combine > 0).astype(x.dtype)                  # (B,T,E,C)
+
+    # dispatch is a 0/1 selection matrix — bf16 accumulation is exact here
+    # and avoids materializing f32 copies of the (E,B,C,d) buffers
+    expert_in = jnp.einsum("btec,btd->ebcd", dispatch, x, preferred_element_type=x.dtype)
+    expert_in = constrain(expert_in, "tp", "dp", None, None)
+    expert_out = _expert_ffn(expert_in, params, act)          # (E,B,C,d)
+    expert_out = constrain(expert_out, "tp", "dp", None, None)
+    y = jnp.einsum(
+        "btec,ebcd->btd", combine.astype(jnp.float32), expert_out.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    return y, aux
+
+
+def moe_gather(params: dict, x: jnp.ndarray, mcfg: MoEConfig, act: str):
+    """Sorted gather/scatter dispatch, per batch row.
+
+    Same semantics as moe_einsum at equal per-row capacity (tested), but the
+    O(B*T*E*C*d) one-hot einsums become O(T log T) sorts + O(E*C*d) gathers.
+    Routing stays LOCAL to each batch row, so under batch-over-data sharding
+    there is no cross-shard token shuffle — the expert buffers keep exactly
+    the (dp-shardable) layout of the einsum path.
+    """
+    b, t, d = x.shape
+    e, k = mcfg.num_experts, mcfg.top_k
+    c = _capacity(t, mcfg)
+    top_w, top_i, aux = _route(params, x, mcfg)
+
+    def one_row(x_t, w_row, i_row):
+        # x_t (T, d); w/i (T, K)
+        expert_flat = i_row.reshape(t * k)
+        w_flat = w_row.reshape(t * k)
+        tok_flat = jnp.arange(t * k, dtype=jnp.int32) // k
+        order = jnp.argsort(expert_flat, stable=True)      # token priority in expert
+        se, st, sw = expert_flat[order], tok_flat[order], w_flat[order]
+        counts = jnp.bincount(expert_flat, length=e)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+        valid = rank < c
+        slot = jnp.where(valid, se * c + rank, e * c)      # overflow -> scratch
+        buf_tok = jnp.full((e * c + 1,), t, jnp.int32).at[slot].set(jnp.where(valid, st, t))
+        buf_w = jnp.zeros((e * c + 1,), jnp.float32).at[slot].set(jnp.where(valid, sw, 0.0))
+        xt_pad = jnp.concatenate([x_t, jnp.zeros((1, d), x_t.dtype)], axis=0)
+        expert_in = xt_pad[buf_tok[: e * c]].reshape(e, c, d)
+        return expert_in, buf_tok[: e * c], buf_w[: e * c]
+
+    expert_in, buf_tok, buf_w = jax.vmap(one_row)(x, top_w, top_i)   # (B,E,C,d)
+    expert_in = constrain(jnp.moveaxis(expert_in, 1, 0), "tp", "dp", None, None)
+    expert_out = _expert_ffn(expert_in, params, act)                 # (E,B,C,d)
+    expert_out = constrain(expert_out, "tp", "dp", None, None)
+
+    def combine_row(out_row, tok_row, w_row):
+        # out_row (E*C, d) in this row's buffer order; scatter-add to (T, d)
+        y = jnp.zeros((t + 1, d), jnp.float32).at[tok_row].add(
+            out_row.astype(jnp.float32) * w_row[:, None]
+        )
+        return y[:t]
+
+    out_rows = jnp.moveaxis(expert_out, 0, 1).reshape(b, e * c, d)
+    y = jax.vmap(combine_row)(out_rows, buf_tok, buf_w)
+    return y.astype(x.dtype), aux
+
+
+def moe_layer(params: dict, x: jnp.ndarray, mcfg: MoEConfig, act: str):
+    fn = moe_gather if mcfg.dispatch == "gather" else moe_einsum
+    y, aux = fn(params, x, mcfg, act)
+    if mcfg.n_shared_experts:
+        sp = params["shared"]
+        gate = jax.nn.silu(blas.matmul(x, sp["w_gate"]).astype(jnp.float32))
+        up = blas.matmul(x, sp["w_up"]).astype(jnp.float32)
+        y = y + blas.matmul((gate * up).astype(x.dtype), sp["w_down"])
+    return y, aux

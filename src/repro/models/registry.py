@@ -1,0 +1,28 @@
+"""arch-id -> config registry (one module per assigned architecture)."""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "rwkv6-1.6b",
+    "command-r-plus-104b",
+    "codeqwen1.5-7b",
+    "internlm2-20b",
+    "stablelm-1.6b",
+    "paligemma-3b",
+    "zamba2-1.2b",
+    "moonshot-v1-16b-a3b",
+    "grok-1-314b",
+    "whisper-large-v3",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str, variant: str = "full"):
+    """variant: 'full' (exact brief numbers) | 'smoke' (CPU-runnable)."""
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.FULL if variant == "full" else mod.SMOKE

@@ -1,0 +1,210 @@
+"""RWKV6 "Finch" blocks (attention-free, data-dependent decay).
+
+Faithful to the Finch architecture at the block level: token-shift mixing,
+per-channel data-dependent decay produced by a low-rank MLP (the defining
+RWKV6 feature), bonus `u` for the current token, per-head group norm, and a
+squared-ReLU channel-mix.  Simplification vs the reference implementation
+(noted in DESIGN.md): token-shift interpolation coefficients are static
+per-channel parameters (RWKV5-style) rather than the data-dependent ddlerp;
+the decay path keeps its full data dependence.
+
+The WKV recurrence runs through kernels/ops.rwkv6 on the pallas backend or
+the chunked pure-JAX path below (same math as the kernel, vectorized over
+chunks with a lax.scan carry) for XLA dry-runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import blas
+from repro.core.act_sharding import constrain
+from repro.models import layers
+
+
+# --------------------------------------------------------------------------
+# Chunked WKV6 in pure JAX (mirrors kernels/rwkv6.py; stability: exponents<=0)
+# --------------------------------------------------------------------------
+
+def wkv6_chunked(r, k, v, w_log, u, s0=None, chunk: int = 32, unroll: bool = False):
+    """r/k/w_log (BH,T,K), v (BH,T,V), u (BH,K) -> (y (BH,T,V), s (BH,K,V))."""
+    bh, t, kk = r.shape
+    vv = v.shape[-1]
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        r, k, v, w_log = z(r), z(k), z(v), jnp.pad(w_log, ((0, 0), (0, pad), (0, 0)))
+    nc = r.shape[1] // c
+    shp = lambda a: constrain(
+        jnp.moveaxis(a.reshape(bh, nc, c, -1), 1, 0).astype(jnp.float32),
+        None, ("dp", "tp"), None, None,
+    )
+    rs, ks, vs, ws = shp(r), shp(k), shp(v), shp(w_log)
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((bh, kk, vv), jnp.float32)
+
+    mask = jnp.tril(jnp.ones((c, c), jnp.float32), -1)
+
+    def body(s, inp):
+        rc, kc, vc, wc = inp                        # (BH, C, K/V)
+        L = jnp.cumsum(wc, axis=1)
+        Lprev = L - wc
+        q_t = rc * jnp.exp(Lprev)
+        y = jnp.einsum("bck,bkv->bcv", q_t, s, preferred_element_type=jnp.float32)
+        E = Lprev[:, :, None, :] - L[:, None, :, :]  # (BH,C,C,K), <=0 on valid s<t
+        A = jnp.sum(
+            rc[:, :, None, :] * kc[:, None, :, :] * jnp.exp(jnp.minimum(E, 0.0)),
+            axis=-1,
+        ) * mask
+        y += jnp.einsum("bts,bsv->btv", A, vc, preferred_element_type=jnp.float32)
+        diag = jnp.sum(rc * uf[:, None, :] * kc, axis=-1, keepdims=True)
+        y += diag * vc
+        l_last = L[:, -1:, :]
+        k_sc = kc * jnp.exp(l_last - L)
+        s = jnp.exp(l_last[:, 0, :])[:, :, None] * s + jnp.einsum(
+            "bck,bcv->bkv", k_sc, vc, preferred_element_type=jnp.float32
+        )
+        return s, y
+
+    s_fin, ys = jax.lax.scan(
+        body, constrain(s0.astype(jnp.float32), ("dp", "tp"), None, None), (rs, ks, vs, ws),
+        unroll=True if unroll else 1,
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bh, nc * c, vv)[:, :t]
+    return y.astype(r.dtype), s_fin
+
+
+def wkv6_step(r, k, v, w_log, u, s):
+    """Single-token recurrence.  r/k/w (BH,K), v (BH,V), s (BH,K,V)."""
+    rf, kf, vf = (z.astype(jnp.float32) for z in (r, k, v))
+    kv = kf[:, :, None] * vf[:, None, :]
+    y = jnp.einsum("bk,bkv->bv", rf, s + u.astype(jnp.float32)[:, :, None] * kv)
+    s = jnp.exp(w_log.astype(jnp.float32))[:, :, None] * s + kv
+    return y.astype(r.dtype), s
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def init_time_mix(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    rank = cfg.rwkv.decay_lora_rank
+    hd = cfg.rwkv.head_dim
+    nh = d // hd
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    return {
+        "mu": jnp.full((5, d), 0.5, dtype),  # shift-mix for r,k,v,w,g
+        "w_r": (jax.random.normal(ks[0], (d, d)) * std).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d, d)) * std).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d, d)) * std).astype(dtype),
+        "w_g": (jax.random.normal(ks[3], (d, d)) * std).astype(dtype),
+        "w_o": (jax.random.normal(ks[4], (d, d)) * std).astype(dtype),
+        "decay_w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_a": (jax.random.normal(ks[5], (d, rank)) * std).astype(dtype),
+        "decay_b": (jax.random.normal(ks[6], (rank, d)) * (rank ** -0.5)).astype(dtype),
+        "u": (jax.random.normal(ks[7], (nh, hd)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.ones((d,), dtype),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    std = d ** -0.5
+    return {
+        "mu": jnp.full((2, d), 0.5, dtype),  # r, k
+        "w_r": (jax.random.normal(ks[0], (d, d)) * std).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d, f)) * std).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (f, d)) * (f ** -0.5)).astype(dtype),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x (B,T,d): returns x shifted right by one token; first uses x_prev (B,d)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def time_mix(params, x, cfg: ModelConfig, state=None):
+    """x (B,T,d).  state: {"x_prev": (B,d), "s": (B,H,K,V)} or None (zeros).
+    Returns (out, new_state)."""
+    b, t, d = x.shape
+    hd = cfg.rwkv.head_dim
+    nh = d // hd
+    x_prev = state["x_prev"] if state is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, x_prev)
+    mu = params["mu"]
+    mix = lambda i: x + (xs - x) * mu[i]
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+
+    r = blas.matmul(xr, params["w_r"])
+    k = blas.matmul(xk, params["w_k"])
+    v = blas.matmul(xv, params["w_v"])
+    g = jax.nn.silu(blas.matmul(xg, params["w_g"]).astype(jnp.float32)).astype(x.dtype)
+    # data-dependent decay (the Finch feature): w = -exp(w0 + tanh(xw A) B)
+    lora = blas.matmul(jnp.tanh(blas.matmul(xw, params["decay_a"]).astype(jnp.float32)).astype(x.dtype), params["decay_b"])
+    w_log = -jnp.exp(params["decay_w0"] + lora.astype(jnp.float32))  # (B,T,d) <= 0
+    w_log = jnp.maximum(w_log, -20.0)
+
+    # heads: (B,T,d) -> (B*H, T, hd)
+    to_h = lambda z: jnp.moveaxis(z.reshape(b, t, nh, hd), 2, 1).reshape(b * nh, t, hd)
+    u = jnp.broadcast_to(params["u"][None], (b, nh, hd)).reshape(b * nh, hd)
+    s0 = state["s"].reshape(b * nh, hd, hd).astype(jnp.float32) if state is not None else None
+
+    if t == 1 and state is not None:
+        y, s_fin = wkv6_step(
+            to_h(r)[:, 0], to_h(k)[:, 0], to_h(v)[:, 0],
+            to_h(w_log.astype(x.dtype))[:, 0].astype(jnp.float32), u, s0,
+        )
+        y = y[:, None, :]
+    else:
+        y, s_fin = wkv6_chunked(
+            to_h(r), to_h(k), to_h(v), to_h(w_log.astype(jnp.float32)), u,
+            s0=s0, chunk=cfg.rwkv.chunk, unroll=cfg.scan_unroll,
+        )
+    y = jnp.moveaxis(y.reshape(b, nh, t, hd), 1, 2)  # (B,T,H,hd)
+    y = layers.rms_norm(y, params["ln_x"].reshape(nh, hd) - 1.0)  # per-head norm
+    y = (y.reshape(b, t, d).astype(jnp.float32) * g.astype(jnp.float32)).astype(x.dtype)
+    out = blas.matmul(y, params["w_o"])
+    new_state = {"x_prev": x[:, -1, :], "s": s_fin.reshape(b, nh, hd, hd)}
+    return out, new_state
+
+
+def channel_mix(params, x, state=None):
+    b, t, d = x.shape
+    x_prev = state["x_prev"] if state is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, x_prev)
+    mu = params["mu"]
+    xr = x + (xs - x) * mu[0]
+    xk = x + (xs - x) * mu[1]
+    k = blas.matmul(xk, params["w_k"]).astype(jnp.float32)
+    k = jnp.square(jax.nn.relu(k)).astype(x.dtype)
+    out = jax.nn.sigmoid(blas.matmul(xr, params["w_r"]).astype(jnp.float32)).astype(
+        x.dtype
+    ) * blas.matmul(k, params["w_v"])
+    return out, {"x_prev": x[:, -1, :]}
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.init_norm(cfg.d_model, "ln", dtype),
+        "ln2": layers.init_norm(cfg.d_model, "ln", dtype),
+        "tm": init_time_mix(k1, cfg, dtype),
+        "cm": init_channel_mix(k2, cfg, dtype),
+    }
+
+
+def rwkv_block(params, x, cfg: ModelConfig, state=None):
+    tm_state = state["tm"] if state is not None else None
+    cm_state = state["cm"] if state is not None else None
+    h, tm_new = time_mix(params["tm"], layers.apply_norm(params["ln1"], x, "ln"), cfg, tm_state)
+    x = x + h
+    h, cm_new = channel_mix(params["cm"], layers.apply_norm(params["ln2"], x, "ln"), cm_state)
+    x = x + h
+    return x, {"tm": tm_new, "cm": cm_new}

@@ -1,0 +1,2 @@
+"""Optimizers + distributed-optimization tricks (ZeRO sharding, compression)."""
+from repro.optim import adamw, compression  # noqa: F401

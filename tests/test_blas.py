@@ -1,0 +1,111 @@
+"""core.blas vs numpy semantics, including hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blas
+
+RTOL = 1e-5
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_dot_nrm2_axpy():
+    x, y = _rand(0, 257), _rand(1, 257)
+    np.testing.assert_allclose(blas.dot(x, y), np.dot(x, y), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(blas.nrm2(x), np.linalg.norm(x), rtol=RTOL)
+    np.testing.assert_allclose(blas.axpy(2.5, x, y), 2.5 * np.asarray(x) + np.asarray(y), rtol=RTOL)
+
+
+def test_gemv_with_beta():
+    A, x, y = _rand(0, 33, 65), _rand(1, 65), _rand(2, 33)
+    out = blas.gemv(A, x, y, alpha=2.0, beta=3.0)
+    np.testing.assert_allclose(out, 2.0 * np.asarray(A) @ np.asarray(x) + 3.0 * np.asarray(y), rtol=1e-4, atol=1e-4)
+    out_t = blas.gemv(A, y, trans=True)
+    np.testing.assert_allclose(out_t, np.asarray(A).T @ np.asarray(y), rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_alpha_beta_transpose():
+    A, B, C = _rand(0, 31, 17), _rand(1, 17, 23), _rand(2, 31, 23)
+    out = blas.gemm(A, B, C, alpha=0.5, beta=2.0)
+    ref = 0.5 * np.asarray(A) @ np.asarray(B) + 2.0 * np.asarray(C)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    out_t = blas.gemm(B, A, transpose_a=True, transpose_b=True)
+    np.testing.assert_allclose(out_t, np.asarray(B).T @ np.asarray(A).T, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_batched():
+    x, w = _rand(0, 4, 7, 33), _rand(1, 33, 11)
+    np.testing.assert_allclose(
+        blas.matmul(x, w), np.asarray(x) @ np.asarray(w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_backend_switch_ref_equals_xla():
+    A, B = _rand(0, 16, 16), _rand(1, 16, 16)
+    with blas.use_backend("ref"):
+        r1 = blas.gemm(A, B)
+        assert blas.get_backend() == "ref"
+    r2 = blas.gemm(A, B)
+    np.testing.assert_allclose(r1, r2, rtol=1e-5)
+    with pytest.raises(ValueError):
+        blas.set_backend("nope")
+
+
+# --------------------------------------------------------------------------
+# Property tests (hypothesis): BLAS algebraic invariants
+# --------------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=48)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2 ** 16))
+def test_gemm_matches_numpy_property(m, k, n, seed):
+    kk = jax.random.split(jax.random.PRNGKey(seed), 2)
+    A = jax.random.normal(kk[0], (m, k), jnp.float32)
+    B = jax.random.normal(kk[1], (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        blas.gemm(A, B), np.asarray(A) @ np.asarray(B), rtol=2e-4, atol=2e-4
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 512), seed=st.integers(0, 2 ** 16))
+def test_dot_symmetry_and_cauchy_schwarz(n, seed):
+    kk = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(kk[0], (n,), jnp.float32)
+    y = jax.random.normal(kk[1], (n,), jnp.float32)
+    assert abs(float(blas.dot(x, y)) - float(blas.dot(y, x))) < 1e-3
+    # |<x,y>| <= ||x|| ||y||
+    assert abs(float(blas.dot(x, y))) <= float(blas.nrm2(x)) * float(blas.nrm2(y)) * (1 + 1e-4) + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=dims, seed=st.integers(0, 2 ** 16))
+def test_gemv_linearity(m, k, seed):
+    kk = jax.random.split(jax.random.PRNGKey(seed), 3)
+    A = jax.random.normal(kk[0], (m, k), jnp.float32)
+    x = jax.random.normal(kk[1], (k,), jnp.float32)
+    y = jax.random.normal(kk[2], (k,), jnp.float32)
+    lhs = blas.gemv(A, x + y)
+    rhs = blas.gemv(A, x) + blas.gemv(A, y)
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2 ** 16))
+def test_gemm_gemv_consistency(m, k, n, seed):
+    """GEMM column j == GEMV with B[:, j] (the paper's DAG claim: GEMM is n
+    independent GEMVs, which are n independent DDOTs)."""
+    kk = jax.random.split(jax.random.PRNGKey(seed), 2)
+    A = jax.random.normal(kk[0], (m, k), jnp.float32)
+    B = jax.random.normal(kk[1], (k, n), jnp.float32)
+    C = blas.gemm(A, B)
+    j = n // 2
+    np.testing.assert_allclose(C[:, j], blas.gemv(A, B[:, j]), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,73 @@
+"""Checkpoint manager: atomic save, bit-exact restore, retention, elasticity."""
+
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)), "b": jnp.zeros((16,))},
+        "opt": {"m": [jnp.ones((3,)), jnp.zeros((2, 2))], "count": jnp.asarray(7)},
+    }
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    state = _state()
+    checkpoint.save(tmp_path, 10, state)
+    template = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = checkpoint.restore(tmp_path, 10, template)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_and_retention(tmp_path):
+    state = _state()
+    for s in (1, 2, 3, 4):
+        checkpoint.save(tmp_path, s, state)
+    assert checkpoint.latest_step(tmp_path) == 4
+    checkpoint.retain(tmp_path, keep=2)
+    assert checkpoint.latest_step(tmp_path) == 4
+    assert not (Path(tmp_path) / "step_00000001").exists()
+    assert (Path(tmp_path) / "step_00000003").exists()
+
+
+def test_atomicity_partial_write_invisible(tmp_path):
+    """A checkpoint dir without a manifest (simulated crash mid-save) must be
+    invisible to latest_step and not break restore of earlier steps."""
+    state = _state()
+    checkpoint.save(tmp_path, 1, state)
+    # simulate crash: a half-written tmp dir and a manifest-less dir
+    (Path(tmp_path) / "step_00000002.tmp").mkdir()
+    (Path(tmp_path) / "step_00000003").mkdir()
+    np.save(Path(tmp_path) / "step_00000003" / "leaf_00000.npy", np.zeros(3))
+    assert checkpoint.latest_step(tmp_path) == 1
+    template = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = checkpoint.restore(tmp_path, 1, template)
+    assert restored["opt"]["count"] == 7
+
+
+def test_overwrite_same_step(tmp_path):
+    state = _state(0)
+    checkpoint.save(tmp_path, 5, state)
+    state2 = _state(1)
+    checkpoint.save(tmp_path, 5, state2)
+    template = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state2)
+    restored = checkpoint.restore(tmp_path, 5, template)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]), np.asarray(state2["params"]["w"]))
+
+
+def test_manifest_records_shapes(tmp_path):
+    state = _state()
+    d = checkpoint.save(tmp_path, 2, state)
+    manifest = json.loads((d / "manifest.json").read_text())
+    assert manifest["step"] == 2
+    assert manifest["leaves"]["params/w"]["shape"] == [8, 16]

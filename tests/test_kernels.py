@@ -1,0 +1,208 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+F32, BF16 = jnp.float32, jnp.bfloat16
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == BF16 else dict(rtol=2e-4, atol=2e-4)
+
+
+def _cmp(a, b, dtype):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), **_tol(dtype)
+    )
+
+
+# --------------------------------------------------------------------------
+# GEMM
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128), (300, 200, 170), (64, 96, 32), (8, 8, 8)])
+def test_gemm_sweep(m, k, n, dtype):
+    ka, kb = jax.random.split(jax.random.PRNGKey(m * k + n), 2)
+    a = jax.random.normal(ka, (m, k), F32).astype(dtype)
+    b = jax.random.normal(kb, (k, n), F32).astype(dtype)
+    _cmp(ops.gemm(a, b, block_m=128, block_n=128, block_k=128), ref.gemm(a, b), dtype)
+
+
+def test_gemm_block_shape_invariance():
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 384), F32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (384, 256), F32)
+    out_ref = ref.gemm(a, b)
+    for bm, bn, bk in [(64, 64, 64), (128, 256, 128), (256, 128, 384)]:
+        _cmp(ops.gemm(a, b, block_m=bm, block_n=bn, block_k=bk), out_ref, F32)
+
+
+# --------------------------------------------------------------------------
+# GEMV / Level-1
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+@pytest.mark.parametrize("m,n", [(128, 128), (513, 700), (64, 2048)])
+def test_gemv_sweep(m, n, dtype):
+    ka, kb = jax.random.split(jax.random.PRNGKey(m + n), 2)
+    a = jax.random.normal(ka, (m, n), F32).astype(dtype)
+    x = jax.random.normal(kb, (n,), F32).astype(dtype)
+    _cmp(ops.gemv(a, x), ref.gemv(a, x), dtype)
+
+
+@pytest.mark.parametrize("n", [128, 1000, 4096])
+def test_blas1_sweep(n):
+    kx, ky = jax.random.split(jax.random.PRNGKey(n), 2)
+    x = jax.random.normal(kx, (n,), F32)
+    y = jax.random.normal(ky, (n,), F32)
+    _cmp(ops.dot(x, y), ref.dot(x, y), F32)
+    _cmp(ops.nrm2(x), ref.nrm2(x), F32)
+    _cmp(ops.axpy(1.7, x, y), ref.axpy(1.7, x, y), F32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 1024), seed=st.integers(0, 2 ** 16))
+def test_blas1_property(n, seed):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(kx, (n,), F32)
+    y = jax.random.normal(ky, (n,), F32)
+    _cmp(ops.dot(x, y), ref.dot(x, y), F32)
+
+
+# --------------------------------------------------------------------------
+# Flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+@pytest.mark.parametrize("tq,tk,d,causal", [
+    (256, 256, 64, True),
+    (128, 256, 64, True),    # decode-style: queries at the end of kv
+    (1, 256, 64, True),      # single-token decode
+    (128, 128, 128, False),
+])
+def test_flash_attention_sweep(tq, tk, d, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(tq * tk), 3)
+    q = jax.random.normal(ks[0], (3, tq, d), F32).astype(dtype)
+    k = jax.random.normal(ks[1], (3, tk, d), F32).astype(dtype)
+    v = jax.random.normal(ks[2], (3, tk, d), F32).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=max(1, min(64, tq)), block_k=64)
+    _cmp(out, ref.attention(q, k, v, causal=causal), dtype)
+
+
+def test_flash_attention_block_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (jax.random.normal(kk, (2, 256, 64), F32) for kk in ks)
+    out_ref = ref.attention(q, k, v, causal=True)
+    for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]:
+        out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+        _cmp(out, out_ref, F32)
+
+
+# --------------------------------------------------------------------------
+# RWKV6 / Mamba2 scans
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,chunk", [(64, 16), (96, 32), (100, 32), (32, 32)])
+def test_rwkv6_kernel_sweep(t, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(t), 5)
+    bh, kk, vv = 2, 32, 32
+    r = jax.random.normal(ks[0], (bh, t, kk), F32) * 0.5
+    k = jax.random.normal(ks[1], (bh, t, kk), F32) * 0.5
+    v = jax.random.normal(ks[2], (bh, t, vv), F32) * 0.5
+    w = -jnp.exp(jax.random.normal(ks[3], (bh, t, kk), F32))
+    u = jax.random.normal(ks[4], (bh, kk), F32) * 0.5
+    y = ops.rwkv6(r, k, v, w, u, chunk=chunk)
+    y_ref, _ = ref.rwkv6(r, k, v, w, u)
+    _cmp(y, y_ref, F32)
+
+
+def test_rwkv6_strong_decay_stability():
+    """Exponents must not overflow even with near-total per-step decay."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    bh, t, kk = 2, 64, 16
+    r, k, v = (jax.random.normal(ks[i], (bh, t, kk), F32) for i in range(3))
+    w = jnp.full((bh, t, kk), -15.0)  # decay ~ 3e-7 per step
+    u = jnp.zeros((bh, kk))
+    y = ops.rwkv6(r, k, v, w, u, chunk=16)
+    y_ref, _ = ref.rwkv6(r, k, v, w, u)
+    assert np.isfinite(np.asarray(y)).all()
+    _cmp(y, y_ref, F32)
+
+
+@pytest.mark.parametrize("t,chunk", [(64, 16), (128, 64), (100, 32)])
+def test_mamba2_kernel_sweep(t, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(t), 4)
+    bh, p, n = 2, 32, 16
+    x = jax.random.normal(ks[0], (bh, t, p), F32) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (bh, t), F32)) * 0.5
+    b = jax.random.normal(ks[2], (bh, t, n), F32) * 0.5
+    c = jax.random.normal(ks[3], (bh, t, n), F32) * 0.5
+    y = ops.mamba2_ssd(x, a, b, c, chunk=chunk)
+    y_ref, _ = ref.ssd(x, a, b, c)
+    _cmp(y, y_ref, F32)
+
+
+# --------------------------------------------------------------------------
+# Pure-JAX chunked paths must match the kernels (three-way agreement)
+# --------------------------------------------------------------------------
+
+def test_wkv6_chunked_jax_matches_kernel_and_ref():
+    from repro.models.rwkv import wkv6_chunked
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    bh, t, kk = 2, 80, 16
+    r, k, v = (jax.random.normal(ks[i], (bh, t, kk), F32) * 0.5 for i in range(3))
+    w = -jnp.exp(jax.random.normal(ks[3], (bh, t, kk), F32))
+    u = jax.random.normal(ks[4], (bh, kk), F32) * 0.5
+    y_jax, s_jax = wkv6_chunked(r, k, v, w, u, chunk=16)
+    y_ref, s_ref = ref.rwkv6(r, k, v, w, u)
+    _cmp(y_jax, y_ref, F32)
+    _cmp(s_jax, s_ref, F32)
+    _cmp(ops.rwkv6(r, k, v, w, u, chunk=16), y_ref, F32)
+
+
+def test_ssd_chunked_jax_matches_kernel_and_ref():
+    from repro.models.mamba import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    bh, t, p, n = 2, 96, 16, 8
+    x = jax.random.normal(ks[0], (bh, t, p), F32) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (bh, t), F32)) * 0.5
+    b = jax.random.normal(ks[2], (bh, t, n), F32) * 0.5
+    c = jax.random.normal(ks[3], (bh, t, n), F32) * 0.5
+    y_jax, h_jax = ssd_chunked(x, a, b, c, chunk=32)
+    y_ref, h_ref = ref.ssd(x, a, b, c)
+    _cmp(y_jax, y_ref, F32)
+    _cmp(h_jax, h_ref, F32)
+    _cmp(ops.mamba2_ssd(x, a, b, c, chunk=32), y_ref, F32)
+
+
+@pytest.mark.parametrize("dtype", [BF16])
+def test_rwkv6_kernel_bf16(dtype):
+    """bf16 inputs, f32 state math: the TPU production configuration."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    bh, t, kk = 2, 64, 16
+    r = (jax.random.normal(ks[0], (bh, t, kk), F32) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (bh, t, kk), F32) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (bh, t, kk), F32) * 0.5).astype(dtype)
+    w = -jnp.exp(jax.random.normal(ks[3], (bh, t, kk), F32))
+    u = jax.random.normal(ks[4], (bh, kk), F32) * 0.5
+    y = ops.rwkv6(r, k, v, w, u, chunk=16)
+    y_ref, _ = ref.rwkv6(r, k, v, w, u)
+    _cmp(y, y_ref, dtype)
+
+
+@pytest.mark.parametrize("dtype", [BF16])
+def test_mamba2_kernel_bf16(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(12), 4)
+    bh, t, p, n = 2, 64, 16, 8
+    x = (jax.random.normal(ks[0], (bh, t, p), F32) * 0.5).astype(dtype)
+    a = -jnp.abs(jax.random.normal(ks[1], (bh, t), F32)) * 0.5
+    b = (jax.random.normal(ks[2], (bh, t, n), F32) * 0.5).astype(dtype)
+    c = (jax.random.normal(ks[3], (bh, t, n), F32) * 0.5).astype(dtype)
+    y = ops.mamba2_ssd(x, a, b, c, chunk=16)
+    y_ref, _ = ref.ssd(x, a, b, c)
+    _cmp(y, y_ref, dtype)

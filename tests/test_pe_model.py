@@ -1,0 +1,80 @@
+"""The PE latency model must reproduce the paper's published tables."""
+
+import numpy as np
+import pytest
+
+from repro.core import pe_model as pm
+
+
+@pytest.mark.parametrize("ae", pm.AE_ORDER)
+def test_latency_matches_published_tables(ae):
+    errs = []
+    for n, pub in zip(pm.SIZES, pm.PUBLISHED_LATENCY[ae]):
+        model = pm.latency_cycles(n, ae)
+        errs.append(abs(model - pub) / pub)
+    assert max(errs) < 0.06, f"{ae}: max cell error {max(errs):.3%}"
+    assert float(np.mean(errs)) < 0.025, f"{ae}: mean error {np.mean(errs):.3%}"
+
+
+def test_cpf_accounting_matches_paper_convention():
+    # Table 4: 39000 cycles at n=20 -> CPF 1.625 under the 3n^3 convention
+    assert pm.paper_flops(20) == 24000
+    assert abs(pm.latency_cycles(20, "AE0") / pm.paper_flops(20) - 1.625) < 0.02
+
+
+def test_ae5_reaches_74_pct_peak():
+    # headline claim: up to 74% of peak FPC for DGEMM
+    assert 72.0 < pm.pct_peak_fpc(100, "AE5") < 77.0
+    # and AE1 saturates around 54% of its (2-flop) peak
+    assert 50.0 < pm.pct_peak_fpc(100, "AE1") < 58.0
+
+
+def test_routine_pct_peak_claims():
+    # paper: 74% DGEMM, 40% DGEMV, 20% DDOT at AE5
+    assert abs(pm.routine_pct_peak("dgemv") - 40.0) < 2.0
+    assert abs(pm.routine_pct_peak("ddot") - 20.0) < 2.0
+    assert abs(pm.routine_pct_peak("dgemm") - 74.0) < 3.0
+
+
+def test_speedup_ladder():
+    # paper: 7x (20x20), 8.13x (40x40), 8.34x (60x60) over base PE
+    assert abs(pm.speedup_over_base(40) - 8.13) < 0.5
+    assert abs(pm.speedup_over_base(60) - 8.34) < 0.5
+
+
+@pytest.mark.parametrize("ae", ["AE1", "AE2", "AE3", "AE4", "AE5"])
+def test_improvement_rows(ae):
+    for n, pub in zip(pm.SIZES, pm.PUBLISHED_IMPROVEMENT[ae]):
+        got = pm.improvement_over_previous(n, ae)
+        assert abs(got - pub) < 5.0, (ae, n, got, pub)
+
+
+def test_power_derivation_is_consistent():
+    # derived watts constant across sizes to ~1% within each AE, and the
+    # DOT4-equipped AEs share the same hardware power
+    assert abs(pm.AE_WATTS["AE2"] - pm.AE_WATTS["AE5"]) / pm.AE_WATTS["AE5"] < 0.02
+    assert pm.AE_WATTS["AE0"] < pm.AE_WATTS["AE1"] < pm.AE_WATTS["AE2"]
+
+
+def test_gflops_per_watt_reproduces_tables():
+    for ae in pm.AE_ORDER:
+        for n, pub in zip(pm.SIZES, pm.PUBLISHED_GFLOPS_PER_WATT[ae]):
+            got = pm.gflops_per_watt(n, ae)
+            assert abs(got - pub) / pub < 0.07, (ae, n, got, pub)
+
+
+def test_redefine_tile_scaling():
+    # Fig 12: speed-up approaches b^2 from below, monotone in n
+    for b in (2, 3, 4):
+        s_small = pm.redefine_speedup(20, b)
+        s_big = pm.redefine_speedup(400, b)
+        assert s_small < s_big < b ** 2
+        assert s_big > 0.9 * b ** 2  # asymptote
+    # 2x2 at n=20: each tile computes a 10x10 block; comm-dominated (paper)
+    assert pm.redefine_speedup(20, 2) < 3.6
+
+
+def test_alpha_overlap_approaches_one():
+    # Eq (7): latency / DOT4-issues -> 1 with full overlap (AE5, large n)
+    assert pm.alpha_overlap(100, "AE5") < 1.3
+    assert pm.alpha_overlap(100, "AE5") < pm.alpha_overlap(20, "AE5")

@@ -1,0 +1,57 @@
+"""End-to-end behaviour tests for the whole system (public API surface)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blas
+from repro.launch.serve import serve
+from repro.launch.train import train
+
+
+def test_train_end_to_end(tmp_path):
+    """Train a reduced model for 30 steps through the real driver: loss must
+    fall and checkpoints must appear."""
+    state, losses = train(
+        arch="codeqwen1.5-7b", variant="smoke", steps=30, seq=32, batch=8,
+        ckpt_dir=str(tmp_path), ckpt_every=10, lr=3e-3, log_every=50,
+    )
+    assert len(losses) == 30
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+    from repro import checkpoint
+    assert checkpoint.latest_step(tmp_path) == 30
+
+
+def test_serve_end_to_end():
+    stats = serve("stablelm-1.6b", "smoke", requests=4, batch=2,
+                  prompt_len=16, gen=4, verbose=False)
+    assert stats["completed"] == 4
+    assert stats["tokens"] > 0
+
+
+def test_blas_is_the_model_substrate():
+    """Switching the BLAS backend changes the whole model's execution path
+    but not its semantics (ref vs xla on a real forward)."""
+    from repro.models import transformer as tf
+    from repro.models.registry import get_config
+
+    cfg = get_config("internlm2-20b", "smoke")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    h1, _, _ = tf.forward(params, {"tokens": tokens}, cfg)
+    with blas.use_backend("ref"):
+        h2, _, _ = tf.forward(params, {"tokens": tokens}, cfg)
+    np.testing.assert_allclose(
+        np.asarray(h1, np.float32), np.asarray(h2, np.float32), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_pallas_backend_runs_model_layer():
+    """The pallas backend executes a real projection through the kernel path
+    (interpret mode on CPU)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 128), jnp.float32)
+    ref_out = blas.matmul(x, w)
+    with blas.use_backend("pallas"):
+        pl_out = blas.matmul(x, w)
+    np.testing.assert_allclose(np.asarray(pl_out), np.asarray(ref_out), rtol=2e-4, atol=2e-4)
