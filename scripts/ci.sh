@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the exact command the roadmap pins, on CPU.
+#
+#   ./scripts/ci.sh            # run the full suite
+#   ./scripts/ci.sh -k blas    # extra args forwarded to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -160,17 +160,107 @@ def gemm(
     return out
 
 
+def batched_gemm(
+    A: jnp.ndarray,  # (batch, m, k) (before transpose_a)
+    B: jnp.ndarray,  # (batch, k, n) or (k, n) broadcast (before transpose_b)
+    C: Optional[jnp.ndarray] = None,
+    *,
+    alpha=1.0,
+    beta=0.0,
+    transpose_a: bool = False,
+    transpose_b: bool = False,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Batched dgemm: C[b] = alpha * op(A[b]) op(B[b]) + beta * C[b].
+
+    One fused launch for the whole batch (KBLAS-style): the pallas backend
+    folds the batch into the kernel grid instead of looping N tiny GEMMs.
+    A 2-D B is broadcast across the batch — the shared-weight serving case,
+    where the kernel fetches each B tile once and reuses it per batch member.
+    """
+    if transpose_a:
+        A = jnp.swapaxes(A, -2, -1)
+    if transpose_b:
+        B = jnp.swapaxes(B, -2, -1)
+    backend = get_backend()
+    if backend == "pallas":
+        from repro.kernels import ops
+        out = ops.bgemm(A, B, out_dtype=out_dtype)
+    elif backend == "ref":
+        from repro.kernels import ref
+        out = ref.bgemm(A, B, out_dtype=out_dtype)
+    else:
+        acc = _acc_dtype(A)
+        out = jnp.matmul(A, B, preferred_element_type=acc).astype(out_dtype or A.dtype)
+    if alpha != 1.0:
+        out = scal(alpha, out)
+    if C is not None and beta != 0.0:
+        out = out + scal(beta, C)
+    return out
+
+
+def batched_gemv(
+    A: jnp.ndarray,  # (batch, m, n) or (m, n) broadcast (before trans)
+    x: jnp.ndarray,  # (batch, n)
+    y: Optional[jnp.ndarray] = None,
+    *,
+    alpha=1.0,
+    beta=0.0,
+    trans: bool = False,
+) -> jnp.ndarray:
+    """Batched dgemv: y[b] = alpha * op(A[b]) x[b] + beta * y[b] -> (batch, m).
+
+    A single GEMV is bandwidth-bound (the paper's 40%-of-peak case); batching
+    N of them into one launch is the classic fix.  A 2-D A is broadcast —
+    the batched-decode case where every request multiplies the same weights,
+    so A traffic amortizes over the batch.
+    """
+    if trans:
+        A = jnp.swapaxes(A, -2, -1)
+    backend = get_backend()
+    if backend == "pallas":
+        from repro.kernels import ops
+        out = ops.bgemv(A, x)
+    elif backend == "ref":
+        from repro.kernels import ref
+        out = ref.bgemv(A, x)
+    else:
+        acc = _acc_dtype(A)
+        out = jnp.matmul(
+            A.astype(acc), x[..., None].astype(acc)
+        )[..., 0].astype(A.dtype)
+    out = scal(alpha, out)
+    if y is not None and beta != 0.0:
+        out = out + scal(beta, y)
+    return out
+
+
 def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Model-layer entry point: x (..., d) @ w (d, f) -> (..., f).
 
     Every projection in the model zoo calls this, so switching the backend
-    switches the whole network onto the co-designed kernels.
+    switches the whole network onto the co-designed kernels.  Inputs with
+    leading batch dims keep their per-request structure: under the pallas
+    backend they route through the fused batched kernels with broadcast
+    weights (bgemm, or bgemv for decode-shaped (..., 1, d) blocks) instead
+    of reshape-flattening the batch away.
     """
     backend = get_backend()
     if backend == "pallas":
         from repro.kernels import ops
         lead = x.shape[:-1]
-        out = ops.gemm(x.reshape(-1, x.shape[-1]), w)
+        if x.ndim <= 2:
+            out = ops.gemm(x.reshape(-1, x.shape[-1]), w)
+            return out.reshape(*lead, w.shape[-1])
+        rows, d = x.shape[-2], x.shape[-1]
+        xb = x.reshape(-1, rows, d)
+        if rows == 1:
+            # decode-shaped: one token per batch member -> batched GEMV with
+            # broadcast weights (y[b] = w^T x[b]); cast back to the activation
+            # dtype (bgemv's out dtype follows its first operand, here w)
+            out = ops.bgemv(w.T, xb[:, 0, :]).astype(x.dtype)
+            return out.reshape(*lead, w.shape[-1])
+        out = ops.bgemm(xb, w)
         return out.reshape(*lead, w.shape[-1])
     acc = _acc_dtype(x)
     if acc == jnp.float32 and x.dtype == jnp.bfloat16:

@@ -146,3 +146,66 @@ class GridPlan:
 
 def plan_gemm(m: int, n: int, k: int, **kw) -> GridPlan:
     return GridPlan(m, n, k, choose_block_shape(m, n, k, **kw))
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedGridPlan:
+    """Execution plan for a fused batched GEMM: grid (m/bm, n/bn, batch, k/bk).
+
+    The batch axis adds no per-step VMEM (one member's tiles are in flight at
+    a time), so the per-member block shape is chosen by the same AE4 argument
+    as the single GEMM.  What the batch changes is *reuse*: the kernel grid
+    is (m/bm, n/bn, batch, k/bk) — batch inside the output-tile coords — so
+    a broadcast B whose k extent is one tile (nk == 1) keeps a constant
+    block index across consecutive batch steps and is fetched once per
+    (i, j) for the whole batch.  The pipeline only elides DMAs between
+    consecutive steps, so multi-k-tile weights are refetched per member.
+    """
+
+    batch: int
+    m: int
+    n: int
+    k: int
+    block: BlockShape
+    broadcast_b: bool = False
+
+    @property
+    def grid(self) -> tuple[int, int, int, int]:
+        # kernel order: batch inside the output-tile coords, k innermost
+        return (
+            cdiv(self.m, self.block.bm),
+            cdiv(self.n, self.block.bn),
+            self.batch,
+            cdiv(self.k, self.block.bk),
+        )
+
+    @property
+    def padded(self) -> tuple[int, int, int]:
+        g = self.grid
+        return (g[0] * self.block.bm, g[1] * self.block.bn, g[3] * self.block.bk)
+
+    @property
+    def num_block_matmuls(self) -> int:
+        g = self.grid
+        return g[0] * g[1] * g[2] * g[3]
+
+    def b_tile_fetches(self) -> int:
+        """HBM fetches of B tiles for the whole batch.
+
+        Models the Pallas pipeline's consecutive-step DMA elision on the
+        (i, j, batch, k) grid: a broadcast B is reused across the batch only
+        when its k extent is a single tile (constant index while the batch
+        advances); otherwise every member refetches its k sweep.
+        """
+        nm, nn, _, nk = self.grid
+        if self.broadcast_b and nk == 1:
+            return nm * nn
+        return self.batch * nm * nn * nk
+
+
+def plan_batched_gemm(
+    batch: int, m: int, n: int, k: int, *, broadcast_b: bool = False, **kw
+) -> BatchedGridPlan:
+    return BatchedGridPlan(
+        batch, m, n, k, choose_block_shape(m, n, k, **kw), broadcast_b
+    )

@@ -1,0 +1,11 @@
+"""Version compat for jax.experimental.pallas.tpu API renames.
+
+`TPUCompilerParams` became `CompilerParams` in newer jax; kernels import the
+alias from here so they run on either.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -21,15 +21,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 NEG_INF = -1e30
 
 
 def _flash_kernel(
     q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     *, nk: int, bq: int, bk: int, scale: float, causal: bool, offset: int,
+    kv_len: int,
 ):
     ik = pl.program_id(2)
     iq = pl.program_id(1)
+    mask_k = kv_len < nk * bk  # keys beyond kv_len are tile padding
 
     @pl.when(ik == 0)
     def _init():
@@ -37,11 +41,14 @@ def _flash_kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Causal block culling (paper AE3 analog: skip whole-block work/DMAs that
-    # the dependency structure proves dead).
+    # Block culling (paper AE3 analog: skip whole-block work/DMAs that the
+    # dependency structure proves dead): causally-invisible blocks, and
+    # blocks lying entirely in the key padding.
     first_k = ik * bk
     last_q = iq * bq + bq - 1 + offset
-    visible = (not causal) or (first_k <= last_q)
+    visible = first_k < kv_len
+    if causal:
+        visible = jnp.logical_and(visible, first_k <= last_q)
 
     @pl.when(visible)
     def _body():
@@ -51,10 +58,15 @@ def _flash_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )                                                   # (bq, bk)
-        if causal:
+        if causal or mask_k:
             qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offset
             kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            s = jnp.where(qpos >= kpos, s, NEG_INF)
+            keep = jnp.full((bq, bk), True)
+            if causal:
+                keep &= qpos >= kpos
+            if mask_k:
+                keep &= kpos < kv_len
+            s = jnp.where(keep, s, NEG_INF)
         m_prev = m_ref[...]                                 # (bq, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         p = jnp.exp(s - m_new)                              # (bq, bk)
@@ -79,10 +91,21 @@ def attention(
     scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
+    q_len: int | None = None,
+    kv_len: int | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    """q/k/v may be block-padded along T; q_len/kv_len are the REAL lengths.
+
+    Keys at positions >= kv_len are tile padding and are masked to -inf
+    (the paper's fringe handling: pad to the hardware tile, neutralize the
+    pad in-kernel).  The causal offset aligns the real query range to the
+    END of the real key range, independent of how much padding either got.
+    """
     bh, tq, d = q.shape
     _, tk, _ = k.shape
+    q_len = tq if q_len is None else q_len
+    kv_len = tk if kv_len is None else kv_len
     if scale is None:
         scale = d ** -0.5
     block_q = min(block_q, tq)
@@ -96,7 +119,8 @@ def attention(
         bk=block_k,
         scale=scale,
         causal=causal,
-        offset=tk - tq,
+        offset=kv_len - q_len,
+        kv_len=kv_len,
     )
     return pl.pallas_call(
         kernel,
@@ -113,7 +137,7 @@ def attention(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

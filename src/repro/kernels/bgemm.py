@@ -1,0 +1,105 @@
+"""Batched blocked GEMM Pallas kernel — one fused launch for N small GEMMs.
+
+The paper's PE hits 74% of peak on DGEMM but the serving workload is not one
+big GEMM: it is a *batch* of per-request matmuls (attention QK^T/PV, MoE
+expert FFNs).  Launching them one by one leaves the memory system idle
+between kernels — the KBLAS observation for batched GPU BLAS.  This kernel
+folds the batch into the grid (m/bm, n/bn, batch, k/bk) so the Pallas
+pipeline double-buffers tiles *across* batch members as well as across
+blocks, and the whole batch is one launch.
+
+Two B layouts:
+  - batched B (batch, k, n): independent right-hand sides (attention, MoE
+    experts with per-expert weights);
+  - broadcast B (k, n): one shared weight matrix applied to every batch
+    member (the serving case — same projection for every request).  The
+    B tile's index_map ignores the batch coordinate, and the batch axis
+    sits INSIDE the (i, j) output-tile coordinates in the grid, so whenever
+    the weight's k extent is a single tile (nk == 1 — the common
+    d_model-sized projection) the B index is unchanged across consecutive
+    batch steps and the pipeline fetches it once per (i, j) for the whole
+    batch.  Multi-k-tile weights still refetch per batch member (the
+    pipeline only elides DMAs between consecutive steps); even then the
+    broadcast layout avoids materializing batch copies of B in HBM.
+
+Per-batch-member f32 VMEM accumulator, flushed on the last k step, exactly
+like the single GEMM kernel (the accumulate term never touches HBM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _compat
+
+
+def _bgemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, b_batched: bool):
+    k = pl.program_id(3)  # grid (m/bm, n/bn, batch, k/bk): k innermost
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b_tile = b_ref[0] if b_batched else b_ref[...]
+    acc_ref[...] += jnp.dot(
+        a_ref[0], b_tile, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def bgemm(
+    a: jnp.ndarray,  # (batch, m, k)
+    b: jnp.ndarray,  # (batch, k, n) or (k, n) broadcast across the batch
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C[b] = A[b] @ B[b] (or A[b] @ B for 2-D B).  Dims must divide the
+    blocks (ops.bgemm pads first — the paper's DOT2/DOT3 fringe handling)."""
+    batch, m, ka = a.shape
+    b_batched = b.ndim == 3
+    kb, n = b.shape[-2:]
+    assert ka == kb, (a.shape, b.shape)
+    if b_batched:
+        assert b.shape[0] == batch, (a.shape, b.shape)
+    block_m, block_n, block_k = (min(block_m, m), min(block_n, n), min(block_k, ka))
+    assert m % block_m == 0 and n % block_n == 0 and ka % block_k == 0, (
+        (batch, m, n, ka),
+        (block_m, block_n, block_k),
+    )
+    # batch between (i, j) and k: consecutive steps sweep k within one batch
+    # member, then advance the member — so a broadcast-B tile with nk == 1
+    # keeps a constant index across the whole batch (fetched once per (i, j)).
+    grid = (m // block_m, n // block_n, batch, ka // block_k)
+    kernel = functools.partial(_bgemm_kernel, nk=grid[3], b_batched=b_batched)
+    if b_batched:
+        b_spec = pl.BlockSpec((1, block_k, block_n), lambda i, j, bi, k: (bi, k, j))
+    else:
+        # index_map drops the batch coordinate: the broadcast-B serving case.
+        b_spec = pl.BlockSpec((block_k, block_n), lambda i, j, bi, k: (k, j))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k), lambda i, j, bi, k: (bi, i, k)),
+            b_spec,
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n), lambda i, j, bi, k: (bi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m, n), out_dtype or a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)

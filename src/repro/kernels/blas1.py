@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _reduce_kernel(x_ref, y_ref, o_ref, acc_ref, *, nn: int, mode: str):
     j = pl.program_id(0)
@@ -52,7 +54,7 @@ def _reduce(x, y, mode, block_n, interpret):
         out_specs=pl.BlockSpec((1, 1), lambda j: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
         scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,
@@ -87,7 +89,7 @@ def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray, *, block_n: int = 2048, interpre
         ],
         out_specs=pl.BlockSpec((1, block_n), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, chunk: int):
     it = pl.program_id(1)
@@ -91,7 +93,7 @@ def ssd(
         out_specs=pl.BlockSpec((1, chunk, p), lambda bb, i: (bb, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, t, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 
 from repro.core import tiling
 from repro.kernels import attention as _attention
+from repro.kernels import bgemm as _bgemm
+from repro.kernels import bgemv as _bgemv
 from repro.kernels import blas1 as _blas1
 from repro.kernels import gemm as _gemm
 from repro.kernels import gemv as _gemv
@@ -43,6 +45,8 @@ def _interpret() -> bool:
 def gemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m=256, block_n=256, block_k=256):
     m, k = a.shape
     _, n = b.shape
+    if b.shape[0] != k:
+        raise ValueError(f"gemm shape mismatch: {a.shape} @ {b.shape}")
     bm, bn, bk = (min(block_m, tiling.round_up(m, 8)),
                   min(block_n, tiling.round_up(n, 128)),
                   min(block_k, tiling.round_up(k, 128)))
@@ -57,12 +61,64 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m=256, block_n=256, block_k=25
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
 def gemv(a: jnp.ndarray, x: jnp.ndarray, *, block_m=512, block_n=512):
     m, n = a.shape
+    if x.shape[0] != n:
+        raise ValueError(f"gemv shape mismatch: {a.shape} @ {x.shape}")
     bm, bn = min(block_m, tiling.round_up(m, 8)), min(block_n, tiling.round_up(n, 128))
     a, _ = tiling.pad_dim_to(a, 0, bm)
     a, _ = tiling.pad_dim_to(a, 1, bn)
     x, _ = tiling.pad_dim_to(x, 0, bn)
     out = _gemv.gemv(a, x, block_m=bm, block_n=bn, interpret=_interpret())
     return out[:m]
+
+
+# --------------------------------------------------------------------------
+# Batched GEMM / GEMV (fused-launch batch execution layer)
+# --------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "out_dtype")
+)
+def bgemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m=None, block_n=None,
+          block_k=None, out_dtype=None):
+    """a (batch, m, k) @ b ((batch,) k, n) -> (batch, m, n); 2-D b broadcasts.
+
+    Block shapes default to the core.tiling AE4 plan for the per-member
+    problem (the batch axis costs no extra VMEM).
+    """
+    batch, m, k = a.shape
+    n = b.shape[-1]
+    # validate BEFORE padding: pad_dim_to would silently absorb a k mismatch
+    if b.shape[-2] != k or (b.ndim == 3 and b.shape[0] != batch):
+        raise ValueError(f"bgemm shape mismatch: {a.shape} @ {b.shape}")
+    if block_m is None or block_n is None or block_k is None:
+        plan = tiling.plan_batched_gemm(batch, m, n, k, broadcast_b=b.ndim == 2)
+        block_m = block_m or plan.block.bm
+        block_n = block_n or plan.block.bn
+        block_k = block_k or plan.block.bk
+    bm, bn, bk = (min(block_m, tiling.round_up(m, 8)),
+                  min(block_n, tiling.round_up(n, 128)),
+                  min(block_k, tiling.round_up(k, 128)))
+    a, _ = tiling.pad_dim_to(a, 1, bm)
+    a, _ = tiling.pad_dim_to(a, 2, bk)
+    b, _ = tiling.pad_dim_to(b, b.ndim - 2, bk)
+    b, _ = tiling.pad_dim_to(b, b.ndim - 1, bn)
+    out = _bgemm.bgemm(a, b, block_m=bm, block_n=bn, block_k=bk,
+                       out_dtype=out_dtype, interpret=_interpret())
+    return out[:, :m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def bgemv(a: jnp.ndarray, x: jnp.ndarray, *, block_m=512, block_n=512):
+    """a ((batch,) m, n) @ x (batch, n) -> (batch, m); 2-D a broadcasts."""
+    m, n = a.shape[-2:]
+    if x.shape[-1] != n or (a.ndim == 3 and a.shape[0] != x.shape[0]):
+        raise ValueError(f"bgemv shape mismatch: {a.shape} @ {x.shape}")
+    bm, bn = min(block_m, tiling.round_up(m, 8)), min(block_n, tiling.round_up(n, 128))
+    a, _ = tiling.pad_dim_to(a, a.ndim - 2, bm)
+    a, _ = tiling.pad_dim_to(a, a.ndim - 1, bn)
+    x, _ = tiling.pad_dim_to(x, 1, bn)
+    out = _bgemv.bgemv(a, x, block_m=bm, block_n=bn, interpret=_interpret())
+    return out[:, :m]
 
 
 # --------------------------------------------------------------------------
@@ -109,15 +165,12 @@ def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
     qp, _ = tiling.pad_dim_to(q, 1, bq)
     kp, _ = tiling.pad_dim_to(k, 1, bk)
     vp, _ = tiling.pad_dim_to(v, 1, bk)
-    if kp.shape[1] != tk:
-        # padded keys must not attend: causal offset handles queries, but
-        # non-causal padded keys need masking — push them to -inf via a key
-        # of zeros and rely on causal mask; for non-causal, fall back to
-        # slicing k/v exactly (callers use block-divisible Tk in practice).
-        assert causal, "non-causal attention requires block-divisible Tk"
+    # Padded keys are masked to -inf inside the kernel (kv_len), and the
+    # causal offset is computed from the REAL lengths, so non-block-divisible
+    # Tq/Tk are handled for both causal and non-causal attention.
     out = _attention.attention(
         qp, kp, vp, causal=causal, scale=scale,
-        block_q=bq, block_k=bk, interpret=_interpret(),
+        block_q=bq, block_k=bk, q_len=tq, kv_len=tk, interpret=_interpret(),
     )
     return out[:, :tq]
 

@@ -38,6 +38,19 @@ def gemm(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
     return jnp.dot(A, B, preferred_element_type=_acc(A)).astype(A.dtype)
 
 
+def bgemm(A: jnp.ndarray, B: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """C[b] = A[b] @ B[b]; 2-D B broadcasts across the batch (shared weights)."""
+    sub = "bmk,kn->bmn" if B.ndim == 2 else "bmk,bkn->bmn"
+    out = jnp.einsum(sub, A, B, preferred_element_type=_acc(A))
+    return out.astype(out_dtype or A.dtype)
+
+
+def bgemv(A: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[b] = A[b] @ x[b]; 2-D A broadcasts across the batch (shared weights)."""
+    sub = "mn,bn->bm" if A.ndim == 2 else "bmn,bn->bm"
+    return jnp.einsum(sub, A, x, preferred_element_type=_acc(A)).astype(A.dtype)
+
+
 # --------------------------------------------------------------------------
 # Attention (flash oracle: full-materialization softmax attention)
 # --------------------------------------------------------------------------

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_ref, *, nt: int, chunk: int):
     it = pl.program_id(1)
@@ -107,7 +109,7 @@ def rwkv6(
         out_specs=pl.BlockSpec((1, chunk, vv), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, t, vv), r.dtype),
         scratch_shapes=[pltpu.VMEM((kk, vv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -166,8 +166,17 @@ def _compile(arch, shape, mesh, cfg, microbatches):
     return compiled, cfg, cell
 
 
-def _cost_dict(compiled):
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() normalized across jax versions (older jax
+    returns [dict], newer returns dict)."""
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def _cost_dict(compiled):
+    cost = cost_analysis_dict(compiled)
     coll = rl.parse_collectives(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -19,19 +19,23 @@ import jax
 from jax.sharding import PartitionSpec as P  # noqa: F401  (re-exported)
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh(shape, axes):
+    # jax >= 0.5 wants explicit axis_types; older jax has no AxisType at all.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for host-device tests (XLA_FLAGS device-count 8)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple:

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import blas
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tf
 from repro.models.registry import get_config
@@ -25,7 +26,17 @@ from repro.models.registry import get_config
 
 def serve(arch: str, variant: str = "smoke", requests: int = 16, batch: int = 4,
           prompt_len: int = 32, gen: int = 16, seed: int = 0, eos: int = 2,
-          verbose: bool = True):
+          verbose: bool = True, backend: str = "xla"):
+    """Under --backend pallas the batched decode step routes its projections
+    through the fused batched kernels: every (B, 1, d) matmul becomes one
+    bgemv launch over the request batch with broadcast weights (the
+    bandwidth-bound GEMV case the batch exists to fix)."""
+    with blas.use_backend(backend):
+        return _serve(arch, variant, requests, batch, prompt_len, gen, seed,
+                      eos, verbose)
+
+
+def _serve(arch, variant, requests, batch, prompt_len, gen, seed, eos, verbose):
     cfg = get_config(arch, variant)
     rng = np.random.default_rng(seed)
     max_len = prompt_len + gen
@@ -91,8 +102,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--backend", default="xla", choices=("xla", "pallas", "ref"),
+                    help="core.blas backend; pallas fuses decode into bgemv")
     args = ap.parse_args()
-    serve(args.arch, args.variant, args.requests, args.batch, args.prompt_len, args.gen)
+    serve(args.arch, args.variant, args.requests, args.batch, args.prompt_len,
+          args.gen, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -79,6 +79,31 @@ def repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
     )
 
 
+def _qk_scores(q, k):
+    """QK^T as a fused batched GEMM over the B*H batch axis.
+
+    q (B,Tq,H,hd), k (B,Tk,H,hd) -> (B,H,Tq,Tk) f32.  Routing through
+    blas.batched_gemm means the pallas backend runs one bgemm launch for all
+    heads instead of an opaque einsum.
+    """
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    qb = jnp.moveaxis(q.astype(jnp.float32), 2, 1).reshape(b * h, tq, hd)
+    kb = jnp.moveaxis(k.astype(jnp.float32), 2, 1).reshape(b * h, tk, hd)
+    s = blas.batched_gemm(qb, kb, transpose_b=True)
+    return s.reshape(b, h, tq, tk)
+
+
+def _attn_combine(p, v):
+    """PV as a fused batched GEMM: p (B,H,Tq,Tk) f32, v (B,Tk,H,hd)
+    -> (B,H,Tq,hd) f32."""
+    b, h, tq, tk = p.shape
+    hd = v.shape[-1]
+    vb = jnp.moveaxis(v.astype(jnp.float32), 2, 1).reshape(b * h, tk, hd)
+    out = blas.batched_gemm(p.reshape(b * h, tq, tk), vb)
+    return out.reshape(b, h, tq, hd)
+
+
 def _attend_block(q, k, v, qpos, kpos, causal: bool, prefix_len):
     """q (B,Tq,H,hd), k/v (B,Tk,H,hd) -> scores softmaxed in f32, out (B,Tq,H,hd).
 
@@ -86,10 +111,7 @@ def _attend_block(q, k, v, qpos, kpos, causal: bool, prefix_len):
     score block only.
     """
     scale = q.shape[-1] ** -0.5
-    s = jnp.einsum(
-        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    ) * scale
+    s = _qk_scores(q, k) * scale
     if causal:
         m = qpos[:, None] >= kpos[None, :]
         if prefix_len is not None:
@@ -124,10 +146,7 @@ def attention_core(
         s = _attend_block(q, k, v, qpos, kpos, causal, prefix_len)
         s = constrain(s, "dp", "tp", None, None)
         p = jax.nn.softmax(s, axis=-1)
-        return jnp.einsum(
-            "bhqk,bkhd->bqhd", p, v.astype(jnp.float32),
-            preferred_element_type=jnp.float32,
-        ).astype(q.dtype)
+        return jnp.moveaxis(_attn_combine(p, v), 1, 2).astype(q.dtype)
 
     qc = min(q_chunk, tq)
     while tq % qc:   # largest divisor <= q_chunk (cross-attn: tk=1500 etc.)
@@ -145,14 +164,15 @@ def attention_core(
         qi, qblk = q_in  # index, (B, qc, H, hd)
         qpos = qi * qc + jnp.arange(qc, dtype=jnp.int32) + offset
         qf = qblk.astype(jnp.float32) * scale
+        # hoist the loop-invariant (B*H, qc, hd) layout of q out of the kv
+        # scan; only the per-step k/v blocks get transposed inside it
+        qb = jnp.moveaxis(qf, 2, 1).reshape(b * h, qc, hd)
 
         def kv_step(carry, kv_in):
             m_run, l_run, acc = carry
             ki, kblk, vblk, kpos = kv_in
-            s = jnp.einsum(
-                "bqhd,bkhd->bhqk", qf, kblk.astype(jnp.float32),
-                preferred_element_type=jnp.float32,
-            )
+            kb = jnp.moveaxis(kblk.astype(jnp.float32), 2, 1).reshape(b * h, kc, hd)
+            s = blas.batched_gemm(qb, kb, transpose_b=True).reshape(b, h, qc, kc)
             if causal:
                 mask = qpos[:, None] >= kpos[None, :]
                 if prefix_len is not None:
@@ -163,10 +183,7 @@ def attention_core(
             p = jnp.exp(s - m_new)
             alpha = jnp.exp(m_run - m_new)
             l_new = alpha * l_run + jnp.sum(p, axis=-1, keepdims=True)
-            acc = alpha[..., 0][..., None] * acc + jnp.einsum(
-                "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32),
-                preferred_element_type=jnp.float32,
-            )
+            acc = alpha[..., 0][..., None] * acc + _attn_combine(p, vblk)
             return (m_new, l_new, acc), None
 
         init = (

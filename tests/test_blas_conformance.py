@@ -1,0 +1,216 @@
+"""Backend conformance: op x backend x dtype x ragged shapes vs kernels/ref.py.
+
+Every `core.blas` entry point must produce the same numbers (to per-dtype
+tolerance) on all three backends, including the fringe sizes (1, 7, 129)
+that exercise `tiling.pad_dim_to`, and the alpha/beta/transpose parameter
+paths that the per-kernel sweeps do not touch.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blas
+from repro.kernels import ref
+
+F32, BF16 = jnp.float32, jnp.bfloat16
+BACKENDS = ("xla", "pallas", "ref")
+DTYPES = (F32, BF16)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == BF16 else dict(rtol=2e-4, atol=2e-4)
+
+
+def _cmp(got, want, dtype, msg=""):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        err_msg=msg, **_tol(dtype)
+    )
+
+
+def _rand(seed, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, F32).astype(dtype)
+
+
+def _np(x):
+    return np.asarray(x, np.float32)
+
+
+# --------------------------------------------------------------------------
+# Level 1
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", [1, 7, 129])
+def test_level1_conformance(backend, dtype, n):
+    x, y = _rand(n, (n,), dtype), _rand(n + 1, (n,), dtype)
+    with blas.use_backend(backend):
+        got_dot = blas.dot(x, y)
+        got_nrm = blas.nrm2(x)
+        got_axpy = blas.axpy(1.7, x, y)
+    _cmp(got_dot, ref.dot(x, y), dtype, f"dot[{backend}]")
+    _cmp(got_nrm, ref.nrm2(x), dtype, f"nrm2[{backend}]")
+    _cmp(got_axpy, ref.axpy(1.7, x, y), dtype, f"axpy[{backend}]")
+
+
+# --------------------------------------------------------------------------
+# GEMV: plain + alpha/beta/trans parameter paths
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,n", [(1, 1), (7, 129), (129, 7)])
+def test_gemv_conformance(backend, dtype, m, n):
+    A = _rand(m * 131 + n, (m, n), dtype)
+    x = _rand(1, (n,), dtype)
+    y = _rand(2, (m,), dtype)
+    xt = _rand(3, (m,), dtype)
+    with blas.use_backend(backend):
+        got = blas.gemv(A, x)
+        got_ab = blas.gemv(A, x, y, alpha=0.5, beta=1.5)
+        got_t = blas.gemv(A, xt, trans=True)
+    _cmp(got, ref.gemv(A, x), dtype, f"gemv[{backend}]")
+    _cmp(got_ab, 0.5 * (_np(A) @ _np(x)) + 1.5 * _np(y), dtype, f"gemv-ab[{backend}]")
+    _cmp(got_t, ref.gemv(A.T, xt), dtype, f"gemv-t[{backend}]")
+
+
+# --------------------------------------------------------------------------
+# GEMM: plain + alpha/beta/transpose parameter paths
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (7, 129, 5), (129, 7, 33)])
+def test_gemm_conformance(backend, dtype, m, k, n):
+    A = _rand(m + k + n, (m, k), dtype)
+    B = _rand(4, (k, n), dtype)
+    C = _rand(5, (m, n), dtype)
+    with blas.use_backend(backend):
+        got = blas.gemm(A, B)
+        got_ab = blas.gemm(A, B, C, alpha=0.5, beta=1.5)
+        got_t = blas.gemm(A.T, B.T, transpose_a=True, transpose_b=True)
+    _cmp(got, ref.gemm(A, B), dtype, f"gemm[{backend}]")
+    _cmp(got_ab, 0.5 * (_np(A) @ _np(B)) + 1.5 * _np(C), dtype, f"gemm-ab[{backend}]")
+    _cmp(got_t, ref.gemm(A, B), dtype, f"gemm-t[{backend}]")
+
+
+# --------------------------------------------------------------------------
+# Batched GEMM: batched-B and broadcast-B, transposes, alpha/beta
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("batch,m,k,n", [(1, 1, 1, 1), (3, 7, 129, 5), (2, 129, 7, 33)])
+def test_batched_gemm_conformance(backend, dtype, batch, m, k, n):
+    A = _rand(batch + m, (batch, m, k), dtype)
+    B = _rand(6, (batch, k, n), dtype)
+    W = _rand(7, (k, n), dtype)
+    C = _rand(8, (batch, m, n), dtype)
+    with blas.use_backend(backend):
+        got = blas.batched_gemm(A, B)
+        got_bc = blas.batched_gemm(A, W)
+        got_ab = blas.batched_gemm(A, B, C, alpha=0.5, beta=1.5)
+        got_t = blas.batched_gemm(
+            jnp.swapaxes(A, 1, 2), jnp.swapaxes(B, 1, 2),
+            transpose_a=True, transpose_b=True,
+        )
+    want = ref.bgemm(A, B)
+    _cmp(got, want, dtype, f"bgemm[{backend}]")
+    _cmp(got_bc, ref.bgemm(A, W), dtype, f"bgemm-bcast[{backend}]")
+    _cmp(got_ab, 0.5 * _np(want) + 1.5 * _np(C), dtype, f"bgemm-ab[{backend}]")
+    _cmp(got_t, want, dtype, f"bgemm-t[{backend}]")
+
+
+# --------------------------------------------------------------------------
+# Batched GEMV: batched-A and broadcast-A, trans, alpha/beta
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("batch,m,n", [(1, 1, 1), (3, 7, 129), (2, 129, 7)])
+def test_batched_gemv_conformance(backend, dtype, batch, m, n):
+    A = _rand(batch * 17 + m, (batch, m, n), dtype)
+    W = _rand(9, (m, n), dtype)
+    x = _rand(10, (batch, n), dtype)
+    y = _rand(11, (batch, m), dtype)
+    with blas.use_backend(backend):
+        got = blas.batched_gemv(A, x)
+        got_bc = blas.batched_gemv(W, x)
+        got_ab = blas.batched_gemv(A, x, y, alpha=0.5, beta=1.5)
+        got_t = blas.batched_gemv(jnp.swapaxes(A, 1, 2), x, trans=True)
+    want = ref.bgemv(A, x)
+    _cmp(got, want, dtype, f"bgemv[{backend}]")
+    _cmp(got_bc, ref.bgemv(W, x), dtype, f"bgemv-bcast[{backend}]")
+    _cmp(got_ab, 0.5 * _np(want) + 1.5 * _np(y), dtype, f"bgemv-ab[{backend}]")
+    _cmp(got_t, want, dtype, f"bgemv-t[{backend}]")
+
+
+def test_shape_mismatch_raises_not_pads():
+    """Padding must not silently absorb a contraction-dim mismatch."""
+    from repro.kernels import ops
+
+    with pytest.raises(ValueError, match="bgemm shape mismatch"):
+        ops.bgemm(jnp.ones((2, 4, 8)), jnp.ones((2, 9, 5)))
+    with pytest.raises(ValueError, match="bgemv shape mismatch"):
+        ops.bgemv(jnp.ones((2, 4, 8)), jnp.ones((3, 8)))
+    with pytest.raises(ValueError, match="gemm shape mismatch"):
+        ops.gemm(jnp.ones((4, 8)), jnp.ones((9, 5)))
+    with pytest.raises(ValueError, match="gemv shape mismatch"):
+        ops.gemv(jnp.ones((4, 8)), jnp.ones((9,)))
+
+
+# --------------------------------------------------------------------------
+# matmul routing: leading batch dims keep their structure under pallas
+# --------------------------------------------------------------------------
+
+def test_matmul_3d_routes_through_bgemm_broadcast(monkeypatch):
+    """blas.matmul on 3-D+ inputs must dispatch to ops.bgemm with a 2-D
+    (broadcast) weight — not reshape-flatten the batch into one GEMM."""
+    from repro.kernels import ops
+
+    calls = []
+    real_bgemm = ops.bgemm
+
+    def spy(a, b, **kw):
+        calls.append((a.shape, b.shape))
+        return real_bgemm(a, b, **kw)
+
+    monkeypatch.setattr(ops, "bgemm", spy)
+    x = _rand(0, (4, 7, 33), F32)
+    w = _rand(1, (33, 11), F32)
+    with blas.use_backend("pallas"):
+        out = blas.matmul(x, w)
+    assert calls == [((4, 7, 33), (33, 11))], calls  # 2-D b == broadcast-B
+    _cmp(out, _np(x) @ _np(w), F32)
+
+    # 4-D input: leading dims fold into the batch axis, still broadcast-B
+    calls.clear()
+    x4 = _rand(2, (2, 3, 5, 33), F32)
+    with blas.use_backend("pallas"):
+        out4 = blas.matmul(x4, w)
+    assert calls == [((6, 5, 33), (33, 11))], calls
+    _cmp(out4, _np(x4) @ _np(w), F32)
+
+
+def test_matmul_decode_routes_through_bgemv(monkeypatch):
+    """Decode-shaped (B, 1, d) matmuls must dispatch to ops.bgemv with
+    broadcast weights (the batched-decode serving path)."""
+    from repro.kernels import ops
+
+    calls = []
+    real_bgemv = ops.bgemv
+
+    def spy(a, x, **kw):
+        calls.append((a.shape, x.shape))
+        return real_bgemv(a, x, **kw)
+
+    monkeypatch.setattr(ops, "bgemv", spy)
+    x = _rand(0, (4, 1, 33), F32)
+    w = _rand(1, (33, 11), F32)
+    with blas.use_backend("pallas"):
+        out = blas.matmul(x, w)
+    assert calls == [((11, 33), (4, 33))], calls  # 2-D a == broadcast-A
+    _cmp(out, _np(x) @ _np(w), F32)

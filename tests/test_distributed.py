@@ -222,7 +222,8 @@ def test_small_mesh_dryrun_cell():
             compiled = lowered.compile()
         finally:
             act_sharding.clear_policy()
-    cost = compiled.cost_analysis()
+    from repro.launch.dryrun import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     assert cost.get("flops", 0) > 0
     stats = rl.parse_collectives(compiled.as_text())
     assert compiled.memory_analysis().temp_size_in_bytes > 0

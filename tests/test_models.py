@@ -172,3 +172,22 @@ def test_prefix_lm_mask_semantics():
     s_causal = jnp.where((qpos >= kpos)[None, None], jnp.einsum("bqhd,bkhd->bhqk", q, k) * hd ** -0.5, -jnp.inf)
     ref_causal = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s_causal, -1), v)
     assert float(jnp.max(jnp.abs(ref - ref_causal))) > 1e-3
+
+
+def test_attention_core_chunked_matches_full_scores():
+    """The long-context lax.scan path (online softmax over kv chunks) must
+    agree with the single-block softmax path — it only triggers above the
+    tq*tk threshold, so the model smoke tests never reach it."""
+    from repro.models import layers
+
+    b, h, hd = 1, 2, 32
+    tq, tk = 2304, 2048  # tq*tk > 4096*1024 -> chunked scan path
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, tq, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, tk, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, tk, h, hd), jnp.float32)
+    out_chunked = layers.attention_core(q, k, v, causal=True)
+    out_full = layers.attention_core(q, k, v, causal=True, full_scores=True)
+    np.testing.assert_allclose(
+        np.asarray(out_chunked), np.asarray(out_full), rtol=2e-4, atol=2e-4
+    )
