@@ -44,7 +44,7 @@ def rows():
         out.append((
             f"gemm_blockspec_{m}x{n}x{k}",
             0.0,
-            f"block={b.bm}x{b.bn}x{b.bk};vmem_bytes={b.vmem_bytes_f32_acc};"
+            f"block={b.bm}x{b.bn}x{b.bk};vmem_bytes={b.vmem_bytes()};"
             f"flops_per_byte={b.arithmetic_intensity():.1f};"
             f"grid={'x'.join(map(str, plan.grid))};pad_waste={plan.pad_waste_fraction():.2%}",
         ))

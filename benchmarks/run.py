@@ -14,6 +14,7 @@ MODULES = [
     "benchmarks.bench_fig2_offtheshelf",  # paper Fig 2 (host measurement)
     "benchmarks.bench_kernels",         # BLAS timings + BlockSpec table
     "benchmarks.bench_batched",         # fused batched BLAS vs per-item loops
+    "benchmarks.bench_serve",           # continuous vs batch-at-a-time serving
     "benchmarks.bench_roofline",        # deliverable (g) roofline table
 ]
 

@@ -40,7 +40,7 @@ def main():
     # --- TPU tiling: the AE4 bandwidth argument on real hardware -----------
     plan = tiling.plan_gemm(8192, 8192, 8192)
     print(f"\nTPU block plan for 8192^3 GEMM: {plan.block} "
-          f"(VMEM {plan.block.vmem_bytes_f32_acc / 2**20:.0f} MiB, "
+          f"(VMEM {plan.block.vmem_bytes() / 2**20:.0f} MiB, "
           f"{plan.block.arithmetic_intensity():.0f} flops/byte)")
 
 

@@ -1,4 +1,4 @@
-"""Batched serving example: prefill + greedy decode with slot recycling.
+"""Batched serving example: continuous batching with slot-level admission.
 
     PYTHONPATH=src python examples/serve_batched.py --arch paligemma-3b
 """
@@ -15,8 +15,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--scheduler", default="continuous", choices=("continuous", "batch"))
     args = ap.parse_args()
-    serve(args.arch, "smoke", args.requests, args.batch, args.prompt_len, args.gen)
+    serve(args.arch, "smoke", args.requests, args.batch, args.prompt_len,
+          args.gen, scheduler=args.scheduler)
 
 
 if __name__ == "__main__":

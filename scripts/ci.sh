@@ -8,3 +8,11 @@ cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# Serve smoke: a small continuous-batching run plus the batch-at-a-time
+# baseline, so the scheduler path is exercised end-to-end on every push.
+for sched in continuous batch; do
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.launch.serve \
+    --variant smoke --requests 6 --batch 2 --prompt-len 8 --gen 4 \
+    --scheduler "$sched"
+done

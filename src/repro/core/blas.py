@@ -53,7 +53,8 @@ def use_backend(name: str):
 
 
 def _acc_dtype(x: jnp.ndarray) -> jnp.dtype:
-    # MXU-style accumulation: low-precision inputs accumulate in f32.
+    # max(f32, operand dtype): low-precision inputs accumulate in f32 (MXU
+    # style); f64 operands keep f64 accumulation (the D-prefix routines).
     return jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16, jnp.int8) else x.dtype
 
 
@@ -63,27 +64,39 @@ def _acc_dtype(x: jnp.ndarray) -> jnp.dtype:
 
 def dot(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """ddot: x^T y (paper Fig 3 DAG: parallel mults + log-depth add tree)."""
-    if get_backend() == "pallas":
+    backend = get_backend()
+    if backend == "pallas":
         from repro.kernels import ops
         return ops.dot(x, y)
+    if backend == "ref":
+        from repro.kernels import ref
+        return ref.dot(x, y)
     acc = _acc_dtype(x)
     return jnp.sum(x.astype(acc) * y.astype(acc)).astype(x.dtype)
 
 
 def nrm2(x: jnp.ndarray) -> jnp.ndarray:
     """dnrm2: sqrt(x^T x) — same DAG as ddot plus one sqrt (paper S4.1)."""
-    if get_backend() == "pallas":
+    backend = get_backend()
+    if backend == "pallas":
         from repro.kernels import ops
         return ops.nrm2(x)
+    if backend == "ref":
+        from repro.kernels import ref
+        return ref.nrm2(x)
     acc = _acc_dtype(x)
     return jnp.sqrt(jnp.sum(jnp.square(x.astype(acc)))).astype(x.dtype)
 
 
 def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """daxpy: alpha*x + y — one fully parallel DAG level."""
-    if get_backend() == "pallas":
+    backend = get_backend()
+    if backend == "pallas":
         from repro.kernels import ops
         return ops.axpy(alpha, x, y)
+    if backend == "ref":
+        from repro.kernels import ref
+        return ref.axpy(alpha, x, y)
     return (jnp.asarray(alpha, x.dtype) * x + y).astype(x.dtype)
 
 
@@ -111,6 +124,9 @@ def gemv(
     if backend == "pallas":
         from repro.kernels import ops
         out = ops.gemv(A, x)
+    elif backend == "ref":
+        from repro.kernels import ref
+        out = ref.gemv(A, x)
     else:
         acc = _acc_dtype(A)
         out = jnp.dot(A, x, preferred_element_type=acc).astype(A.dtype)
@@ -257,7 +273,10 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
         if rows == 1:
             # decode-shaped: one token per batch member -> batched GEMV with
             # broadcast weights (y[b] = w^T x[b]); cast back to the activation
-            # dtype (bgemv's out dtype follows its first operand, here w)
+            # dtype (bgemv's out dtype follows its first operand, here w).
+            # The continuous-batching serve scheduler keeps the slot grid at a
+            # fixed batch size (inactive slots compute and are masked on the
+            # host), so this path — one fused launch — holds at any occupancy.
             out = ops.bgemv(w.T, xb[:, 0, :]).astype(x.dtype)
             return out.reshape(*lead, w.shape[-1])
         out = ops.bgemm(xb, w)

@@ -58,11 +58,18 @@ class BlockShape:
     bn: int
     bk: int
 
-    @property
-    def vmem_bytes_f32_acc(self) -> int:
-        # A + B tiles (double buffered by the pipeline) + f32 accumulator + out
-        return 2 * (self.bm * self.bk + self.bk * self.bn) * 2 + (
-            self.bm * self.bn * 4 + self.bm * self.bn * 2
+    def vmem_bytes(self, dtype_bytes: int = 2) -> int:
+        """Working-set bytes for one grid step: double-buffered A/B tiles +
+        f32 accumulator + output tile, for `dtype_bytes`-wide operands.
+
+        This is THE budget formula `choose_block_shape` enforces (it calls
+        this method), so the selected block and the reported working set can
+        never drift apart; tests/test_dag_tiling.py pins the equality.
+        """
+        return (
+            2 * (self.bm * self.bk + self.bk * self.bn) * dtype_bytes
+            + self.bm * self.bn * 4
+            + self.bm * self.bn * dtype_bytes
         )
 
     def arithmetic_intensity(self) -> float:
@@ -98,19 +105,14 @@ def choose_block_shape(
             for bk in candidates:
                 if bk > round_up(k, MXU_DIM):
                     continue
-                # double-buffered A,B + f32 acc + out tile
-                vmem = (
-                    2 * (bm * bk + bk * bn) * dtype_bytes
-                    + bm * bn * 4
-                    + bm * bn * dtype_bytes
-                )
-                if vmem > vmem_budget:
+                cand = BlockShape(bm, bn, bk)
+                if cand.vmem_bytes(dtype_bytes) > vmem_budget:
                     continue
                 ai = (2 * bm * bn * bk) / ((bm * bk + bk * bn) * dtype_bytes)
                 # tie-break: prefer fewer k-steps (less accumulator traffic)
                 if ai > best_ai or (ai == best_ai and best and bk > best.bk):
                     best_ai = ai
-                    best = BlockShape(bm, bn, bk)
+                    best = cand
     if best is None:  # tiny problem: single MXU tile
         best = BlockShape(MXU_DIM, MXU_DIM, MXU_DIM)
     return best

@@ -47,7 +47,7 @@ def _bgemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, b_batched: bool):
 
     b_tile = b_ref[0] if b_batched else b_ref[...]
     acc_ref[...] += jnp.dot(
-        a_ref[0], b_tile, preferred_element_type=jnp.float32
+        a_ref[0], b_tile, preferred_element_type=acc_ref.dtype
     )
 
     @pl.when(k == nk - 1)
@@ -97,7 +97,8 @@ def bgemm(
         ],
         out_specs=pl.BlockSpec((1, block_m, block_n), lambda i, j, bi, k: (bi, i, j)),
         out_shape=jax.ShapeDtypeStruct((batch, m, n), out_dtype or a.dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMM proper)
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.promote_types(jnp.float32, a.dtype))],
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),

@@ -39,8 +39,8 @@ def _bgemv_kernel(a_ref, x_ref, o_ref, acc_ref, *, nn: int, a_batched: bool):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = (a_ref[0] if a_batched else a_ref[...]).astype(jnp.float32)  # (bm, bn)
-    x = x_ref[0].astype(jnp.float32)                                 # (1, bn)
+    a = (a_ref[0] if a_batched else a_ref[...]).astype(acc_ref.dtype)  # (bm, bn)
+    x = x_ref[0].astype(acc_ref.dtype)                                 # (1, bn)
     acc_ref[...] += jnp.sum(a * x, axis=1, keepdims=True)            # (bm, 1)
 
     @pl.when(j == nn - 1)
@@ -83,7 +83,8 @@ def bgemv(
         ],
         out_specs=pl.BlockSpec((1, block_m, 1), lambda i, bi, j: (bi, i, 0)),
         out_shape=jax.ShapeDtypeStruct((batch, m, 1), a.dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, 1), jnp.float32)],
+        # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMV proper)
+        scratch_shapes=[pltpu.VMEM((block_m, 1), jnp.promote_types(jnp.float32, a.dtype))],
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),

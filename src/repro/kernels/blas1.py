@@ -2,9 +2,13 @@
 
 These are the paper's 20%-of-peak case: pure streaming reductions with zero
 reuse.  The kernels tile the vector into (1, bn) VMEM strips; partial sums
-accumulate in an f32 SMEM-sized scratch and the scalar result is written on
-the last grid step.  daxpy is one fully-parallel DAG level (paper Fig 3) and
+accumulate in an SMEM-sized scratch and the scalar result is written on the
+last grid step.  daxpy is one fully-parallel DAG level (paper Fig 3) and
 needs no scratch at all.
+
+Accumulation runs in max(f32, operand dtype): low-precision operands widen
+to f32, and f64 operands (the paper's D-prefix DDOT/DNRM2/DAXPY proper)
+accumulate in f64 instead of being silently degraded.
 """
 
 from __future__ import annotations
@@ -26,8 +30,8 @@ def _reduce_kernel(x_ref, y_ref, o_ref, acc_ref, *, nn: int, mode: str):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)
-    y = y_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(acc_ref.dtype)
+    y = y_ref[...].astype(acc_ref.dtype)
     acc_ref[...] += jnp.sum(x * y, keepdims=True)
 
     @pl.when(j == nn - 1)
@@ -53,7 +57,7 @@ def _reduce(x, y, mode, block_n, interpret):
         ],
         out_specs=pl.BlockSpec((1, 1), lambda j: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
-        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.promote_types(jnp.float32, x.dtype))],
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
@@ -71,14 +75,15 @@ def nrm2(x: jnp.ndarray, *, block_n: int = 2048, interpret: bool = False):
 
 
 def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
-    o_ref[...] = (alpha_ref[0, 0] * x_ref[...].astype(jnp.float32) + y_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+    acc = alpha_ref.dtype
+    o_ref[...] = (alpha_ref[0, 0] * x_ref[...].astype(acc) + y_ref[...].astype(acc)).astype(o_ref.dtype)
 
 
 def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray, *, block_n: int = 2048, interpret: bool = False):
     (n,) = x.shape
     block_n = min(block_n, n)
     assert n % block_n == 0, (n, block_n)
-    alpha = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    alpha = jnp.asarray(alpha, jnp.promote_types(jnp.float32, x.dtype)).reshape(1, 1)
     out = pl.pallas_call(
         _axpy_kernel,
         grid=(n // block_n,),

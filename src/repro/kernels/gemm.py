@@ -37,7 +37,7 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        a_ref[...], b_ref[...], preferred_element_type=acc_ref.dtype
     )
 
     @pl.when(k == nk - 1)
@@ -76,7 +76,8 @@ def gemm(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype or a.dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMM proper)
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.promote_types(jnp.float32, a.dtype))],
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),

@@ -27,8 +27,8 @@ def _gemv_kernel(a_ref, x_ref, o_ref, acc_ref, *, nn: int):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...].astype(jnp.float32)          # (bm, bn)
-    x = x_ref[...].astype(jnp.float32)          # (1, bn)
+    a = a_ref[...].astype(acc_ref.dtype)        # (bm, bn)
+    x = x_ref[...].astype(acc_ref.dtype)        # (1, bn)
     acc_ref[...] += jnp.sum(a * x, axis=1, keepdims=True)  # (bm, 1)
 
     @pl.when(j == nn - 1)
@@ -58,7 +58,8 @@ def gemv(
         ],
         out_specs=pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, 1), a.dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, 1), jnp.float32)],
+        # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMV proper)
+        scratch_shapes=[pltpu.VMEM((block_m, 1), jnp.promote_types(jnp.float32, a.dtype))],
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),

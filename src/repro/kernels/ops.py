@@ -91,7 +91,10 @@ def bgemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m=None, block_n=None,
     if b.shape[-2] != k or (b.ndim == 3 and b.shape[0] != batch):
         raise ValueError(f"bgemm shape mismatch: {a.shape} @ {b.shape}")
     if block_m is None or block_n is None or block_k is None:
-        plan = tiling.plan_batched_gemm(batch, m, n, k, broadcast_b=b.ndim == 2)
+        # plan under the REAL operand width: an f32/f64 tile may not claim
+        # the bf16 block's VMEM footprint
+        plan = tiling.plan_batched_gemm(batch, m, n, k, broadcast_b=b.ndim == 2,
+                                        dtype_bytes=a.dtype.itemsize)
         block_m = block_m or plan.block.bm
         block_n = block_n or plan.block.bn
         block_k = block_k or plan.block.bk

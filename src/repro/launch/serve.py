@@ -1,18 +1,39 @@
-"""Batched serving driver: prefill + greedy decode with slot recycling.
+"""Batched serving driver: prefill + greedy decode, two schedulers.
 
-Continuous-batching-lite: a fixed slot grid (batch x max_len KV cache);
-finished sequences (synthetic EOS) free their slot, which is refilled from
-the pending queue at the next prefill boundary.  The decode step is jit'd
-with a donated cache so the KV buffers update in place.
+Schedulers
+----------
+- "continuous" (default): real continuous batching over a fixed slot grid
+  (batch x max_len KV cache).  The moment a sequence finishes (EOS or its
+  generation budget) its slot is freed and the next pending request is
+  admitted at the next step boundary — an admission prefill on the fixed
+  grid shape whose rows are grafted into the freed slots, no waiting for the
+  rest of the batch to drain.  Per-slot position state lives in the jit'd decode step
+  (cache["pos"] is a (batch,) vector; the masked step freezes finished
+  slots), so the donated KV cache keeps updating in place while occupancy
+  stays high.  The decode batch shape never changes, so under
+  --backend pallas every projection stays one fused broadcast-A `bgemv`
+  launch at any occupancy — the bandwidth amortization the batch exists for
+  (KBLAS, arXiv:1410.1726: throughput scales with live batch members, not
+  launches).
+- "batch": batch-at-a-time — admit `batch` requests, drain them all, then
+  admit the next group.  Kept as the baseline the continuous scheduler is
+  measured against (benchmarks/bench_serve.py).
+
+Both schedulers serve the pending queue strictly FIFO and report per-request
+TTFT, tok/s, decode-step counts and mean live-slot occupancy in serve()'s
+stats.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
-        --variant smoke --requests 16 --batch 4 --prompt-len 32 --gen 16
+        --variant smoke --requests 16 --batch 4 --prompt-len 32 --gen 16 \
+        --scheduler continuous --backend pallas
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
 import time
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,74 +45,302 @@ from repro.models import transformer as tf
 from repro.models.registry import get_config
 
 
-def serve(arch: str, variant: str = "smoke", requests: int = 16, batch: int = 4,
+def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, batch: int = 4,
           prompt_len: int = 32, gen: int = 16, seed: int = 0, eos: int = 2,
-          verbose: bool = True, backend: str = "xla"):
-    """Under --backend pallas the batched decode step routes its projections
-    through the fused batched kernels: every (B, 1, d) matmul becomes one
-    bgemv launch over the request batch with broadcast weights (the
-    bandwidth-bound GEMV case the batch exists to fix)."""
-    with blas.use_backend(backend):
-        return _serve(arch, variant, requests, batch, prompt_len, gen, seed,
-                      eos, verbose)
+          verbose: bool = True, backend: str = "xla",
+          scheduler: str = "continuous",
+          gen_lens: Optional[Sequence[int]] = None,
+          prompts: Optional[Sequence[np.ndarray]] = None):
+    """Serve `requests` synthetic prompts through greedy decode.
 
+    gen_lens: optional per-request generation budgets (defaults to `gen` for
+    every request) — the mixed-length distribution is where continuous
+    batching wins.  A budget < 1 still yields one token (the prefill
+    output).  eos=-1 disables early stopping (tokens are non-negative).
+    prompts: optional explicit prompt list (tests pass the same prompts to a
+    sequential oracle).  The continuous scheduler admits ragged prompt
+    lengths (one admission prefill per distinct length per round); the
+    batch scheduler requires uniform lengths and raises otherwise.
+    Under --backend pallas the batched decode routes its
+    projections through the fused batched kernels: every (B, 1, d) matmul is
+    one bgemv launch over the request batch with broadcast weights.
 
-def _serve(arch, variant, requests, batch, prompt_len, gen, seed, eos, verbose):
+    Returns a stats dict: completed/tokens/prefills/decode_steps counters,
+    tok_s, mean live-slot `occupancy`, per-request `ttft` (seconds to first
+    generated token), `outputs` (greedy token ids per request, in submission
+    order) and per-request admit/finish decode-step indices.
+    """
     cfg = get_config(arch, variant)
     rng = np.random.default_rng(seed)
-    max_len = prompt_len + gen
+    # request count comes from whichever of prompts/gen_lens/requests is
+    # given (default 16); an explicit `requests` that disagrees is an error,
+    # never a silent truncation.
+    if prompts is not None:
+        n = len(prompts)
+    elif gen_lens is not None:
+        n = len(gen_lens)
+    else:
+        n = requests if requests is not None else 16
+    if requests is not None and requests != n:
+        raise ValueError(f"requests={requests} but {n} prompts/gen_lens given")
+    if prompts is None:
+        prompts = [
+            rng.integers(3, cfg.vocab, size=(prompt_len,), dtype=np.int32)
+            for _ in range(n)
+        ]
+    prompts = [np.asarray(p, np.int32) for p in prompts]
+    if gen_lens is None:
+        gen_lens = [gen] * n
+    if len(gen_lens) != n:
+        raise ValueError(f"{len(gen_lens)} gen_lens for {n} requests")
+    with blas.use_backend(backend):
+        if scheduler == "continuous":
+            if cfg.family not in tf.SLOT_CACHE_FAMILIES:
+                raise ValueError(
+                    f"continuous scheduler supports {tf.SLOT_CACHE_FAMILIES} "
+                    f"families (per-slot KV caches); {cfg.family!r} needs "
+                    f"--scheduler batch"
+                )
+            stats = _serve_continuous(cfg, prompts, list(gen_lens), batch, seed, eos)
+        elif scheduler == "batch":
+            stats = _serve_batch(cfg, prompts, list(gen_lens), batch, seed, eos)
+        else:
+            raise ValueError(f"scheduler must be 'continuous' or 'batch', got {scheduler!r}")
+    if verbose:
+        print(f"[serve] {arch} ({scheduler}): {stats['completed']} requests, "
+              f"{stats['tokens']} tokens in {stats['elapsed_s']:.2f}s -> "
+              f"{stats['tok_s']:.1f} tok/s ({stats['prefills']} prefills, "
+              f"{stats['decode_steps']} decode steps, "
+              f"occupancy {stats['occupancy']:.2f})", flush=True)
+    return stats
+
+
+def _new_stats(nreq: int) -> dict:
+    return {
+        "completed": 0, "tokens": 0, "prefills": 0, "decode_steps": 0,
+        "outputs": [[] for _ in range(nreq)],
+        "ttft": [None] * nreq,
+        "admit_step": [None] * nreq,
+        "finish_step": [None] * nreq,
+    }
+
+
+def _record_token(stats: dict, rid: int, tok_val: int, eos: int, remaining: int) -> bool:
+    """Append one generated token for request `rid`; returns True if the
+    request just finished (EOS, or its budget has `remaining` <= 0 tokens
+    left AFTER this one).  The single budget/EOS rule both schedulers use —
+    keep it in one place so they cannot drift."""
+    stats["outputs"][rid].append(tok_val)
+    stats["tokens"] += 1
+    if tok_val == eos or remaining <= 0:
+        stats["finish_step"][rid] = stats["decode_steps"]
+        stats["completed"] += 1
+        return True
+    return False
+
+
+def _finalize(stats: dict, occ: list, t0: float) -> dict:
+    dt = time.time() - t0
+    stats["elapsed_s"] = dt
+    stats["tok_s"] = stats["tokens"] / dt if dt > 0 else 0.0
+    stats["occupancy"] = float(np.mean(occ)) if occ else 0.0
+    return stats
+
+
+def _cache_len(cfg, prompts, gen_lens: Sequence[int]) -> int:
+    """Slot capacity: the worst-case prompt + its OWN generation budget (the
+    continuous scheduler admits ragged prompt lengths per slot)."""
+    need = max(len(p) + g for p, g in zip(prompts, gen_lens))
+    return need + (cfg.n_prefix if cfg.family == "vlm" else 0)
+
+
+def _prefill_extras(cfg, rng, n: int, enc: int) -> dict:
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patches"] = jnp.asarray(
+            rng.standard_normal((n, cfg.n_prefix, cfg.d_model)).astype(np.float32)
+        )
+    if cfg.family == "audio":
+        extras["frames"] = jnp.asarray(
+            rng.standard_normal((n, enc, cfg.d_model)).astype(np.float32)
+        )
+    return extras
+
+
+def _admit_step(cache, mini, slots, tok, tok0):
+    """jit target for one admission round: graft the prefilled rows into
+    their slots AND splice their first generated tokens into the device
+    token block (one scatter instead of per-slot eager dispatches).
+    Padding rows (slots[i] < 0) drop out of both scatters."""
+    cache = tf.insert_slots_cache(cache, mini, slots)
+    safe = jnp.where(slots < 0, tok.shape[0], slots)
+    tok = tok.at[safe].set(tok0, mode="drop")
+    return cache, tok
+
+
+def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos):
+    """Slot-level admission: finished sequences free their slot immediately;
+    each free slot prefills the next FIFO request into the shared cache."""
+    nreq = len(prompts)
+    cache_len = _cache_len(cfg, prompts, gen_lens)
+    rng = np.random.default_rng(seed + 1)
+
+    params = tf.init_params(jax.random.PRNGKey(seed), cfg)
+    # the admission prefill's zero template is reused every round: no donation
+    prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg))
+    decode_fn = jax.jit(steps_lib.make_decode_step_slots(cfg), donate_argnums=(2,))
+    admit_fn = jax.jit(_admit_step, donate_argnums=(0, 3))
+    mini_zero = tf.init_cache(cfg, batch, cache_len)
+
+    # compile outside the timed region (throwaway buffers), so the stats
+    # measure scheduling, not jit.  Ragged prompts still trace one extra
+    # prefill per distinct length inside the loop.
+    warm_in = {"tokens": jnp.zeros((batch, len(prompts[0])), jnp.int32)}
+    warm_in.update(_prefill_extras(cfg, rng, batch, 0))
+    warm_tok0, warm_mini = prefill_fn(params, warm_in, mini_zero)
+    warm_cache, warm_tok = admit_fn(
+        tf.init_cache(cfg, batch, cache_len, per_slot=True), warm_mini,
+        jnp.zeros(batch, jnp.int32) - 1, jnp.zeros((batch, 1), jnp.int32), warm_tok0)
+    warm_tok, warm_cache = decode_fn(params, warm_tok, warm_cache, jnp.zeros(batch, bool))
+    jax.block_until_ready(warm_tok)
+    del warm_mini, warm_cache, warm_tok, warm_tok0
+
+    pending = collections.deque(enumerate(prompts))  # FIFO: popleft serves arrival order
+    cache = tf.init_cache(cfg, batch, cache_len, per_slot=True)
+    # the token block and active mask live on device; the host only touches
+    # rows on admission/finish events, so a steady decode step has no H2D
+    # transfer (same as the batch-at-a-time loop)
+    tok_dev = jnp.zeros((batch, 1), jnp.int32)
+    active_dev = jnp.zeros(batch, bool)
+    slot_req = np.full(batch, -1)
+    slot_left = np.zeros(batch, np.int64)
+    active = np.zeros(batch, bool)
+    stats = _new_stats(nreq)
+    occ = []
+    t0 = time.time()
+
+    while pending or active.any():
+        # admission: every free slot takes the next pending request at this
+        # step boundary — no waiting for the batch to drain.  Like decode,
+        # the admission prefill runs on the fixed grid shape (one launch per
+        # distinct prompt length this round; padding rows are dropped at the
+        # graft), so a lone admission is not a degenerate batch-1 launch.
+        admits = []
+        for s in range(batch):
+            if not active[s] and pending:
+                rid, prompt = pending.popleft()
+                admits.append((s, rid, prompt))
+        by_len = {}
+        for adm in admits:
+            by_len.setdefault(len(adm[2]), []).append(adm)
+        for plen in sorted(by_len):
+            group = by_len[plen]
+            block = np.zeros((batch, plen), np.int32)
+            slots = np.full(batch, -1, np.int32)
+            for i, (s, _, prompt) in enumerate(group):
+                block[i] = prompt
+                slots[i] = s
+            batch_in = {"tokens": jnp.asarray(block)}
+            batch_in.update(_prefill_extras(cfg, rng, batch, 0))
+            tok0, mini = prefill_fn(params, batch_in, mini_zero)
+            cache, tok_dev = admit_fn(cache, mini, jnp.asarray(slots), tok_dev, tok0)
+            stats["prefills"] += 1
+            tok0_np = np.asarray(tok0)[:, 0]  # sync BEFORE stamping TTFT
+            t_first = time.time() - t0
+            for i, (s, rid, _) in enumerate(group):
+                stats["ttft"][rid] = t_first
+                stats["admit_step"][rid] = stats["decode_steps"]
+                if not _record_token(stats, rid, int(tok0_np[i]), eos, gen_lens[rid] - 1):
+                    active[s] = True
+                    slot_req[s] = rid
+                    slot_left[s] = gen_lens[rid] - 1
+        if admits:
+            active_dev = jnp.asarray(active)
+        if not active.any():
+            continue  # remaining pending requests all finished at prefill
+        occ.append(active.sum() / batch)
+        tok_dev, cache = decode_fn(params, tok_dev, cache, active_dev)
+        stats["decode_steps"] += 1
+        tok_np = np.asarray(tok_dev)[:, 0]
+        finished = False
+        for s in range(batch):
+            if not active[s]:
+                continue
+            slot_left[s] -= 1
+            if _record_token(stats, slot_req[s], int(tok_np[s]), eos, slot_left[s]):
+                active[s] = False
+                slot_req[s] = -1
+                finished = True
+        if finished:
+            active_dev = jnp.asarray(active)
+    return _finalize(stats, occ, t0)
+
+
+def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos):
+    """Batch-at-a-time baseline: a finished sequence's slot idles until the
+    whole batch drains.  The queue is still served strictly FIFO."""
+    nreq = len(prompts)
+    prompt_len = len(prompts[0])
+    if any(len(p) != prompt_len for p in prompts):
+        raise ValueError(
+            "batch scheduler stacks prompts into one (batch, T) prefill and "
+            "needs uniform prompt lengths; ragged prompts need --scheduler "
+            "continuous (per-slot prefill)"
+        )
+    cache_len = _cache_len(cfg, prompts, gen_lens)
     enc = cfg.encoder.n_frames if cfg.family == "audio" else 0
+    rng = np.random.default_rng(seed + 1)
 
     params = tf.init_params(jax.random.PRNGKey(seed), cfg)
     prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg), donate_argnums=(2,))
     decode_fn = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(2,))
 
-    pending = [
-        rng.integers(3, cfg.vocab, size=(prompt_len,), dtype=np.int32)
-        for _ in range(requests)
-    ]
-    stats = {"completed": 0, "tokens": 0, "prefills": 0}
-    t_start = time.time()
+    # compile outside the timed region, mirroring the continuous scheduler
+    warm_in = {"tokens": jnp.zeros((batch, prompt_len), jnp.int32)}
+    warm_in.update(_prefill_extras(cfg, rng, batch, enc))
+    warm_tok, warm_cache = prefill_fn(params, warm_in,
+                                      tf.init_cache(cfg, batch, cache_len, enc_frames=enc))
+    warm_tok, warm_cache = decode_fn(params, warm_tok, warm_cache)
+    jax.block_until_ready(warm_tok)
+    del warm_cache, warm_tok
+
+    pending = collections.deque(enumerate(prompts))
+    stats = _new_stats(nreq)
+    occ = []
+    t0 = time.time()
 
     while pending:
-        active = [pending.pop() for _ in range(min(batch, len(pending)))]
-        nact = len(active)
-        prompts = np.stack(
-            [np.pad(p, (0, 0)) for p in active]
-            + [np.zeros(prompt_len, np.int32)] * (batch - nact)
+        group = [pending.popleft() for _ in range(min(batch, len(pending)))]
+        nact = len(group)
+        prompt_block = np.stack(
+            [p for _, p in group] + [np.zeros(prompt_len, np.int32)] * (batch - nact)
         )
-        batch_in = {"tokens": jnp.asarray(prompts)}
-        if cfg.family == "vlm":
-            batch_in["patches"] = jnp.asarray(
-                rng.standard_normal((batch, cfg.n_prefix, cfg.d_model), dtype=np.float32)
-            )
-        if cfg.family == "audio":
-            batch_in["frames"] = jnp.asarray(
-                rng.standard_normal((batch, enc, cfg.d_model), dtype=np.float32)
-            )
-        cache = tf.init_cache(cfg, batch, max_len + (cfg.n_prefix if cfg.family == "vlm" else 0),
-                              enc_frames=enc)
+        batch_in = {"tokens": jnp.asarray(prompt_block)}
+        batch_in.update(_prefill_extras(cfg, rng, batch, enc))
+        cache = tf.init_cache(cfg, batch, cache_len, enc_frames=enc)
         tok, cache = prefill_fn(params, batch_in, cache)
         stats["prefills"] += 1
+        tok_np = np.asarray(tok)[:, 0]  # sync BEFORE stamping TTFT
         done = np.zeros(batch, bool)
         done[nact:] = True
-        for _ in range(gen):
+        left = np.zeros(batch, np.int64)
+        t_first = time.time() - t0
+        for i, (rid, _) in enumerate(group):
+            stats["ttft"][rid] = t_first
+            stats["admit_step"][rid] = stats["decode_steps"]
+            left[i] = gen_lens[rid] - 1
+            done[i] = _record_token(stats, rid, int(tok_np[i]), eos, left[i])
+        while not done.all():
+            occ.append((~done).sum() / batch)
             tok, cache = decode_fn(params, tok, cache)
+            stats["decode_steps"] += 1
             tok_np = np.asarray(tok)[:, 0]
-            newly = (~done) & ((tok_np == eos))
-            stats["tokens"] += int((~done).sum())
-            done |= newly
-            if done.all():
-                break
-        stats["completed"] += nact
-
-    dt = time.time() - t_start
-    tps = stats["tokens"] / dt if dt > 0 else 0.0
-    if verbose:
-        print(f"[serve] {arch}: {stats['completed']} requests, "
-              f"{stats['tokens']} tokens in {dt:.2f}s -> {tps:.1f} tok/s "
-              f"({stats['prefills']} prefill batches)", flush=True)
-    return stats
+            for i, (rid, _) in enumerate(group):
+                if done[i]:
+                    continue
+                left[i] -= 1
+                done[i] = _record_token(stats, rid, int(tok_np[i]), eos, left[i])
+    return _finalize(stats, occ, t0)
 
 
 def main():
@@ -102,11 +351,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--scheduler", default="continuous", choices=("continuous", "batch"),
+                    help="continuous: slot-level admission; batch: drain-then-refill baseline")
     ap.add_argument("--backend", default="xla", choices=("xla", "pallas", "ref"),
                     help="core.blas backend; pallas fuses decode into bgemv")
     args = ap.parse_args()
     serve(args.arch, args.variant, args.requests, args.batch, args.prompt_len,
-          args.gen, backend=args.backend)
+          args.gen, backend=args.backend, scheduler=args.scheduler)
 
 
 if __name__ == "__main__":

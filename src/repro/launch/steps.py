@@ -76,6 +76,30 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
+def make_decode_step_slots(cfg: ModelConfig):
+    """Masked continuous-batching decode step over the ragged slot grid.
+
+    (params, token (B,1), cache{pos: (B,)}, active (B,) bool) -> (token, cache).
+
+    Every slot computes every step — the batch shape never changes, so there
+    is exactly one jit trace and (under the pallas backend) every projection
+    stays one fused broadcast-weight bgemv launch at any occupancy.  Inactive
+    slots' positions are frozen so a freed slot neither advances nor overflows
+    its KV row while it waits for the next admission; its (discarded) write
+    lands on a position that the admission graft wipes anyway.
+    Jit with donate_argnums=(2,) so the cache updates in place.
+    """
+
+    def decode_step_slots(params, token, cache, active):
+        pos0 = cache["pos"]
+        logits, cache = tf.decode_step(params, token, cache, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        cache = {**cache, "pos": jnp.where(active, pos0 + 1, pos0)}
+        return next_tok, cache
+
+    return decode_step_slots
+
+
 def make_eval_step(cfg: ModelConfig):
     def eval_step(params, batch):
         return tf.lm_loss(params, batch, cfg)

@@ -108,15 +108,17 @@ def _attend_block(q, k, v, qpos, kpos, causal: bool, prefix_len):
     """q (B,Tq,H,hd), k/v (B,Tk,H,hd) -> scores softmaxed in f32, out (B,Tq,H,hd).
 
     Used for a single query chunk against a key range; builds the (Tq, Tk)
-    score block only.
+    score block only.  qpos is (1, Tq) for a shared query offset or (B, Tq)
+    when every batch slot sits at its own position (continuous-batching
+    decode over a ragged slot grid).
     """
     scale = q.shape[-1] ** -0.5
     s = _qk_scores(q, k) * scale
     if causal:
-        m = qpos[:, None] >= kpos[None, :]
+        m = qpos[:, :, None] >= kpos[None, None, :]
         if prefix_len is not None:
-            m = m | (kpos[None, :] < prefix_len)
-        s = jnp.where(m[None, None], s, -1e30)
+            m = m | (kpos[None, None, :] < prefix_len)
+        s = jnp.where(m[:, None], s, -1e30)
     return s
 
 
@@ -129,7 +131,7 @@ def attention_core(
     prefix_len: Optional[int] = None,
     q_chunk: int = 512,
     kv_chunk: int = 1024,
-    q_offset: Optional[jnp.ndarray] = None,  # decode: absolute pos of q[0]
+    q_offset: Optional[jnp.ndarray] = None,  # decode: absolute pos of q[0]; (B,) = per-slot
     full_scores: bool = False,
 ) -> jnp.ndarray:
     """Flash-style attention in pure JAX: lax.scan over q chunks with an inner
@@ -139,9 +141,12 @@ def attention_core(
     b, tq, h, hd = q.shape
     tk = k.shape[1]
     offset = q_offset if q_offset is not None else jnp.asarray(tk - tq, jnp.int32)
+    # (1, 1) shared offset, or (B, 1) per-slot offsets: every mask below is
+    # built from (1|B, Tq) query positions and broadcasts over heads.
+    off = jnp.asarray(offset, jnp.int32).reshape(-1, 1)
 
     if full_scores or tq * tk <= 4096 * 1024:  # small: single block, simplest HLO
-        qpos = jnp.arange(tq, dtype=jnp.int32) + offset
+        qpos = jnp.arange(tq, dtype=jnp.int32)[None, :] + off
         kpos = jnp.arange(tk, dtype=jnp.int32)
         s = _attend_block(q, k, v, qpos, kpos, causal, prefix_len)
         s = constrain(s, "dp", "tp", None, None)
@@ -162,7 +167,7 @@ def attention_core(
 
     def q_step(_, q_in):
         qi, qblk = q_in  # index, (B, qc, H, hd)
-        qpos = qi * qc + jnp.arange(qc, dtype=jnp.int32) + offset
+        qpos = qi * qc + jnp.arange(qc, dtype=jnp.int32)[None, :] + off  # (1|B, qc)
         qf = qblk.astype(jnp.float32) * scale
         # hoist the loop-invariant (B*H, qc, hd) layout of q out of the kv
         # scan; only the per-step k/v blocks get transposed inside it
@@ -174,10 +179,10 @@ def attention_core(
             kb = jnp.moveaxis(kblk.astype(jnp.float32), 2, 1).reshape(b * h, kc, hd)
             s = blas.batched_gemm(qb, kb, transpose_b=True).reshape(b, h, qc, kc)
             if causal:
-                mask = qpos[:, None] >= kpos[None, :]
+                mask = qpos[:, :, None] >= kpos[None, None, :]
                 if prefix_len is not None:
-                    mask = mask | (kpos[None, :] < prefix_len)
-                s = jnp.where(mask[None, None], s, -1e30)
+                    mask = mask | (kpos[None, None, :] < prefix_len)
+                s = jnp.where(mask[:, None], s, -1e30)
             s = constrain(s, "dp", "tp", None, None)
             m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
             p = jnp.exp(s - m_new)
@@ -249,17 +254,32 @@ def init_attention(key, cfg: AttnConfig, dtype=jnp.bfloat16) -> dict:
     return p
 
 
+def _cache_write(buf: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Write `new` (B, T, ...) into `buf` (B, S, ...) at sequence offset `pos`.
+
+    Scalar pos: one slice write at the same offset for every row (prefill and
+    batch-at-a-time decode).  (B,) pos: each slot writes at its own position —
+    the continuous-batching ragged slot grid.
+    """
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice(buf, new, (0, pos) + (0,) * (buf.ndim - 2))
+    return jax.vmap(
+        lambda b_, n_, p_: jax.lax.dynamic_update_slice(b_, n_, (p_,) + (0,) * (b_.ndim - 1))
+    )(buf, new, pos)
+
+
 def attention_layer(
     params: dict,
     x: jnp.ndarray,  # (B, T, d)
     cfg: AttnConfig,
     *,
-    positions: jnp.ndarray,          # (T,) absolute positions of x tokens
-    cache: Optional[dict] = None,    # {"k": (B, S, kv, hd), "v": ..., "pos": scalar}
+    positions: jnp.ndarray,          # (T,) or (B, T) absolute positions of x tokens
+    cache: Optional[dict] = None,    # {"k": (B, S, kv, hd), "v": ..., "pos": scalar | (B,)}
     prefix_len: Optional[int] = None,
 ):
     """Returns (out, new_cache).  With a cache, x is the new-token block
-    (decode: T == 1) appended at cache["pos"]."""
+    (decode: T == 1) appended at cache["pos"]; a (B,) pos vector appends each
+    slot at its own ragged position (continuous batching)."""
     b, t, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
 
@@ -291,16 +311,16 @@ def attention_layer(
 
             kq, ks_ = quant(k)
             vq, vs_ = quant(v)
-            ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0))
-            cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks_, (0, pos, 0, 0))
-            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs_, (0, pos, 0, 0))
+            ck = _cache_write(cache["k"], kq, pos)
+            cv = _cache_write(cache["v"], vq, pos)
+            cks = _cache_write(cache["k_scale"], ks_, pos)
+            cvs = _cache_write(cache["v_scale"], vs_, pos)
             new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs, "pos": pos + t}
             k_full = (ck.astype(jnp.float32) * cks.astype(jnp.float32)).astype(x.dtype)
             v_full = (cv.astype(jnp.float32) * cvs.astype(jnp.float32)).astype(x.dtype)
         else:
-            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            ck = _cache_write(cache["k"], k.astype(cache["k"].dtype), pos)
+            cv = _cache_write(cache["v"], v.astype(cache["v"].dtype), pos)
             new_cache = {"k": ck, "v": cv, "pos": pos + t}
             k_full, v_full = ck, cv
         q_offset = pos

@@ -230,7 +230,12 @@ def forward(params, batch, cfg: ModelConfig, cache=None):
         prefix_len = cfg.n_prefix
 
     pos0 = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
-    positions = jnp.arange(t, dtype=jnp.int32) + pos0
+    if pos0.ndim:
+        # per-slot serving cache: each batch slot decodes at its own ragged
+        # position -> (B, T) positions (rope and the causal mask broadcast)
+        positions = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    else:
+        positions = jnp.arange(t, dtype=jnp.int32) + pos0
 
     if cfg.family in ("dense", "moe", "vlm"):
         pos = cache["pos"] if cache is not None else None
@@ -452,10 +457,28 @@ def lm_loss(params, batch, cfg: ModelConfig):
 # Decode path
 # --------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_frames: int = 0):
-    """Allocate the decode cache pytree (zeros)."""
+#: families whose decode cache is a pure per-slot attention KV cache — the
+#: ones the continuous-batching scheduler (per-slot positions + slot grafts)
+#: supports.  State-space/recurrent caches need per-leaf batch-axis handling
+#: and stay on the batch-at-a-time scheduler for now.
+SLOT_CACHE_FAMILIES = ("dense", "moe", "vlm")
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_frames: int = 0,
+               per_slot: bool = False):
+    """Allocate the decode cache pytree (zeros).
+
+    per_slot=True allocates a (batch,)-vector "pos" instead of a scalar: each
+    slot tracks its own sequence position so finished sequences can be
+    replaced without draining the rest of the batch (continuous batching).
+    """
     dt = cfg.jdtype
     kv, hd = cfg.n_kv, cfg.hd
+    if per_slot and cfg.family not in SLOT_CACHE_FAMILIES:
+        raise ValueError(
+            f"per-slot cache supports families {SLOT_CACHE_FAMILIES}, got {cfg.family!r}"
+        )
+    pos0 = jnp.zeros((batch,), jnp.int32) if per_slot else jnp.zeros((), jnp.int32)
     if cfg.family in ("dense", "moe", "vlm"):
         if cfg.kv_cache_dtype == "int8":
             return {
@@ -463,12 +486,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_frames: int = 0):
                 "v": jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), jnp.int8),
                 "k_scale": jnp.zeros((cfg.n_layers, batch, max_len, kv, 1), jnp.bfloat16),
                 "v_scale": jnp.zeros((cfg.n_layers, batch, max_len, kv, 1), jnp.bfloat16),
-                "pos": jnp.zeros((), jnp.int32),
+                "pos": pos0,
             }
         return {
             "k": jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), dt),
             "v": jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), dt),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": pos0,
         }
     if cfg.family == "rwkv":
         d = cfg.d_model
@@ -505,6 +528,36 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_frames: int = 0):
             "pos": jnp.zeros((), jnp.int32),
         }
     raise ValueError(cfg.family)
+
+
+def insert_slots_cache(cache: dict, mini: dict, slots: jnp.ndarray) -> dict:
+    """Graft rows of a freshly prefilled cache into serving slots.
+
+    `cache` is a per-slot cache (init_cache(..., per_slot=True), pos (B,));
+    `mini` is a scalar-pos cache with the same batch and max_len that just
+    ran a (padded) prompt block through `prefill` — admission runs on the
+    fixed grid shape, like decode, so there is one jit trace per prompt
+    length instead of a per-request batch-1 launch.  Row i of `mini`
+    replaces slot slots[i] wholesale (clearing the previous occupant's
+    residue) and sets that slot's position entry to the mini cache's scalar
+    pos; slots[i] < 0 marks a padding row and is dropped, so the admitted
+    requests continue in place while every other slot keeps decoding
+    untouched.
+    """
+    # negative indices WRAP under jnp indexing (mode="drop" only drops
+    # out-of-range), so rewrite padding markers to B before the scatter
+    nslots = cache["pos"].shape[0]
+    slots = jnp.where(slots < 0, nslots, slots)
+    new = dict(cache)
+    for key in ("k", "v", "k_scale", "v_scale"):
+        if key in cache:
+            new[key] = cache[key].at[:, slots].set(
+                mini[key].astype(cache[key].dtype), mode="drop"
+            )
+    new["pos"] = cache["pos"].at[slots].set(
+        jnp.full(slots.shape, mini["pos"], cache["pos"].dtype), mode="drop"
+    )
+    return new
 
 
 def prefill(params, batch, cache, cfg: ModelConfig):

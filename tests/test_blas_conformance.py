@@ -148,6 +148,134 @@ def test_batched_gemv_conformance(backend, dtype, batch, m, n):
     _cmp(got_t, want, dtype, f"bgemv-t[{backend}]")
 
 
+# --------------------------------------------------------------------------
+# f64: the paper's D-prefix routines must accumulate in double precision
+# (regression: kernels hard-cast operands/accumulators to f32)
+# --------------------------------------------------------------------------
+
+def _f64(seed, shape):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape))
+
+
+def _cancel(n):
+    """f32 accumulation collapses 1e9 + 1 - 1e9 to 0; f64 keeps the 1."""
+    v = np.zeros(n)
+    v[0], v[1], v[2] = 1e9, 1.0, -1e9
+    return v
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_level1_f64_accumulation(backend):
+    with jax.experimental.enable_x64():
+        x, y = _f64(0, (131,)), _f64(1, (131,))
+        cx = jnp.asarray(_cancel(131))
+        with blas.use_backend(backend):
+            got_dot = blas.dot(x, y)
+            got_nrm = blas.nrm2(x)
+            got_axpy = blas.axpy(1.7, x, y)
+            got_cancel = blas.dot(cx, jnp.ones(131))
+        for got in (got_dot, got_nrm, got_axpy):
+            assert got.dtype == jnp.float64, backend
+        np.testing.assert_allclose(np.asarray(got_dot), np.asarray(x) @ np.asarray(y),
+                                   rtol=1e-12, err_msg=f"dot[{backend}]")
+        np.testing.assert_allclose(np.asarray(got_nrm), np.linalg.norm(np.asarray(x)),
+                                   rtol=1e-12, err_msg=f"nrm2[{backend}]")
+        np.testing.assert_allclose(np.asarray(got_axpy), 1.7 * np.asarray(x) + np.asarray(y),
+                                   rtol=1e-12, err_msg=f"axpy[{backend}]")
+        # f32 accumulation would be off by O(100) here, not O(1e-7)
+        np.testing.assert_allclose(float(got_cancel), 1.0, atol=1e-3,
+                                   err_msg=f"dot-cancel[{backend}]")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_level23_f64_accumulation(backend):
+    with jax.experimental.enable_x64():
+        A = _f64(2, (7, 131))
+        B = _f64(3, (131, 9))
+        Ab = _f64(4, (3, 7, 131))
+        xv = _f64(5, (131,))
+        xb = _f64(6, (3, 131))
+        Ac = np.random.default_rng(7).standard_normal((7, 131))
+        Ac[0, :3] = (1e9, 1.0, -1e9)
+        Ac[0, 3:] = 0.0
+        Ac = jnp.asarray(Ac)
+        with blas.use_backend(backend):
+            got_gemv = blas.gemv(A, xv)
+            got_gemm = blas.gemm(A, B)
+            got_bgemm = blas.batched_gemm(Ab, B)
+            got_bgemv = blas.batched_gemv(Ab, xb)
+            got_cancel = blas.gemv(Ac, jnp.ones(131))
+        nA, nB, nAb = np.asarray(A), np.asarray(B), np.asarray(Ab)
+        for got in (got_gemv, got_gemm, got_bgemm, got_bgemv):
+            assert got.dtype == jnp.float64, backend
+        np.testing.assert_allclose(np.asarray(got_gemv), nA @ np.asarray(xv),
+                                   rtol=1e-12, err_msg=f"gemv[{backend}]")
+        np.testing.assert_allclose(np.asarray(got_gemm), nA @ nB,
+                                   rtol=1e-12, err_msg=f"gemm[{backend}]")
+        np.testing.assert_allclose(np.asarray(got_bgemm), nAb @ nB,
+                                   rtol=1e-12, err_msg=f"bgemm[{backend}]")
+        np.testing.assert_allclose(np.asarray(got_bgemv),
+                                   np.einsum("bmn,bn->bm", nAb, np.asarray(xb)),
+                                   rtol=1e-12, err_msg=f"bgemv[{backend}]")
+        np.testing.assert_allclose(float(np.asarray(got_cancel)[0]), 1.0, atol=1e-3,
+                                   err_msg=f"gemv-cancel[{backend}]")
+
+
+# --------------------------------------------------------------------------
+# ref backend must actually dispatch to the kernels/ref.py oracles
+# (regression: dot/nrm2/axpy/gemv only branched on pallas-vs-default, so
+# backend="ref" silently ran the XLA path)
+# --------------------------------------------------------------------------
+
+def test_level1_ref_backend_dispatches_to_oracles(monkeypatch):
+    calls = []
+
+    def _spy(name):
+        real = getattr(ref, name)
+
+        def wrapper(*a, **kw):
+            calls.append(name)
+            return real(*a, **kw)
+
+        return wrapper
+
+    for name in ("dot", "nrm2", "axpy", "gemv"):
+        monkeypatch.setattr(ref, name, _spy(name))
+    x, y = _rand(0, (16,), F32), _rand(1, (16,), F32)
+    A = _rand(2, (8, 16), F32)
+    with blas.use_backend("ref"):
+        blas.dot(x, y)
+        blas.nrm2(x)
+        blas.axpy(0.5, x, y)
+        blas.gemv(A, x)
+    assert calls == ["dot", "nrm2", "axpy", "gemv"], calls
+    # ...and the default backend must NOT touch the oracles
+    calls.clear()
+    blas.dot(x, y)
+    blas.gemv(A, x)
+    assert calls == [], calls
+
+
+def test_bgemm_plans_blocks_for_operand_width(monkeypatch):
+    """ops.bgemm's default block plan must see the real operand width —
+    an f64 tile may not be budgeted as if it were bf16 (regression: the
+    plan call omitted dtype_bytes, so every dtype planned at 2 bytes)."""
+    from repro.core import tiling
+    from repro.kernels import ops
+
+    seen = []
+    real = tiling.plan_batched_gemm
+
+    def spy(*a, **kw):
+        seen.append(kw.get("dtype_bytes"))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(tiling, "plan_batched_gemm", spy)
+    with jax.experimental.enable_x64():
+        ops.bgemm(jnp.ones((2, 9, 130), jnp.float64), jnp.ones((130, 5), jnp.float64))
+    assert seen and seen[-1] == 8, seen
+
+
 def test_shape_mismatch_raises_not_pads():
     """Padding must not silently absorb a contraction-dim mismatch."""
     from repro.kernels import ops

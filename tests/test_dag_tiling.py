@@ -47,6 +47,26 @@ def test_block_chooser_respects_vmem_and_alignment(m, n, k):
     assert vmem <= tiling.DEFAULT_VMEM_BUDGET
 
 
+def test_vmem_bytes_matches_selection_budget_formula():
+    """BlockShape.vmem_bytes(dtype_bytes) must BE the budget formula the
+    chooser enforces (regression: it hardcoded 2-byte operands while
+    choose_block_shape took dtype_bytes)."""
+    b = BlockShape(256, 128, 512)
+    for db in (1, 2, 4, 8):
+        want = 2 * (b.bm * b.bk + b.bk * b.bn) * db + b.bm * b.bn * 4 + b.bm * b.bn * db
+        assert b.vmem_bytes(db) == want
+    # default stays the bf16 working set the seed reported
+    assert b.vmem_bytes() == b.vmem_bytes(2)
+
+
+@pytest.mark.parametrize("dtype_bytes", [1, 2, 4, 8])
+def test_block_chooser_budget_holds_per_dtype(dtype_bytes):
+    """The selected block's working set — measured at the SAME dtype the
+    chooser planned for — must fit the budget for every operand width."""
+    b = choose_block_shape(8192, 8192, 8192, dtype_bytes=dtype_bytes)
+    assert b.vmem_bytes(dtype_bytes) <= tiling.DEFAULT_VMEM_BUDGET
+
+
 def test_bigger_blocks_win_when_they_fit():
     """The AE4 argument: arithmetic intensity grows with block size, so the
     chooser takes the largest VMEM-feasible tile."""
