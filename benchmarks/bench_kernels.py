@@ -37,15 +37,21 @@ def rows():
         us = _time(jax.jit(blas.dot), x, x)
         out.append((f"blas_ddot_n{n}", round(us, 1), ""))
 
-    # Pallas block-shape table (structural, from the compiled-dry-run logic)
+    # Pallas block-shape table (structural, from the compiled-dry-run logic).
+    # pct_roofline: the fraction of v5e peak the chosen block's arithmetic
+    # intensity can sustain on the bf16 roofline (AI * HBM_BW / PEAK_FLOPS,
+    # capped at 1 past the ridge) — the paper's %-of-peak column.
+    from repro.launch.roofline import HBM_BW, PEAK_FLOPS
     for m, n, k in ((4096, 4096, 4096), (8192, 8192, 8192), (4096, 16384, 4096)):
         plan = tiling.plan_gemm(m, n, k)
         b = plan.block
+        pct = min(1.0, b.arithmetic_intensity() * HBM_BW / PEAK_FLOPS)
         out.append((
             f"gemm_blockspec_{m}x{n}x{k}",
             0.0,
             f"block={b.bm}x{b.bn}x{b.bk};vmem_bytes={b.vmem_bytes()};"
             f"flops_per_byte={b.arithmetic_intensity():.1f};"
+            f"pct_roofline={pct:.3f};"
             f"grid={'x'.join(map(str, plan.grid))};pad_waste={plan.pad_waste_fraction():.2%}",
         ))
     return out

@@ -1,9 +1,28 @@
 """Benchmark harness: one module per paper table/figure + roofline/kernels.
 
-Prints ``name,us_per_call,derived`` CSV (one row per measurement)."""
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).  With
+``--json PATH`` it also writes a machine-readable report (schema below) so
+the perf trajectory — GFLOP/s, %-of-roofline, fused-vs-unfused speedup — is
+tracked across PRs; CI validates the schema on every push.
+
+JSON schema (schema_version 1):
+
+    {
+      "schema_version": 1,
+      "host_backend": "cpu" | "tpu" | ...,
+      "modules": ["benchmarks.bench_kernels", ...],
+      "rows": [{"name": str, "us_per_call": float,
+                "metrics": {str: float | str}}, ...],
+      "summary": {"max_gflops": float,          # best observed GFLOP/s
+                  "pct_roofline": float,        # blockspec roofline fraction
+                  "fused_speedup": float,       # best fused/unfused ratio
+                  "fused_structural_win": bool} # launches+HBM strictly fewer
+    }
+"""
 
 import argparse
 import importlib
+import json
 import sys
 import traceback
 
@@ -14,27 +33,91 @@ MODULES = [
     "benchmarks.bench_fig2_offtheshelf",  # paper Fig 2 (host measurement)
     "benchmarks.bench_kernels",         # BLAS timings + BlockSpec table
     "benchmarks.bench_batched",         # fused batched BLAS vs per-item loops
+    "benchmarks.bench_fused_epilogue",  # epilogue fusion vs unfused chains
     "benchmarks.bench_serve",           # continuous vs batch-at-a-time serving
     "benchmarks.bench_roofline",        # deliverable (g) roofline table
 ]
 
 
+def _parse_metrics(derived: str) -> dict:
+    """'k=v;k=v' derived strings -> {k: float|str} (floats where they parse;
+    trailing x/%% markers stripped for the numeric fields)."""
+    metrics = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        key, val = part.split("=", 1)
+        raw = val.rstrip("x%")
+        try:
+            metrics[key] = float(raw)
+        except ValueError:
+            metrics[key] = val
+    return metrics
+
+
+def _summarize(rows: list[dict]) -> dict:
+    gflops, roofline, speedups, structural = [], [], [], []
+    for row in rows:
+        m = row["metrics"]
+        for key in ("gflops", "gflops_fused"):
+            if isinstance(m.get(key), float):
+                gflops.append(m[key])
+        if isinstance(m.get("pct_roofline"), float):
+            roofline.append(m["pct_roofline"])
+        if isinstance(m.get("speedup"), float) and (
+            "unfused_us" in m or row["name"].startswith("fused_")
+        ):
+            speedups.append(m["speedup"])
+            structural.append(str(m.get("structural_win", "")) == "True")
+    return {
+        "max_gflops": max(gflops) if gflops else 0.0,
+        "pct_roofline": max(roofline) if roofline else 0.0,
+        "fused_speedup": max(speedups) if speedups else 0.0,
+        "fused_structural_win": bool(structural) and all(structural),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="substring filter on module name")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters on module names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable report (e.g. "
+                         "BENCH_kernels.json)")
     args = ap.parse_args()
+    filters = args.only.split(",") if args.only else None
     print("name,us_per_call,derived")
     failed = []
+    report_rows = []
+    ran = []
     for modname in MODULES:
-        if args.only and args.only not in modname:
+        if filters and not any(f in modname for f in filters):
             continue
         try:
             mod = importlib.import_module(modname)
+            ran.append(modname)
             for name, us, derived in mod.rows():
                 print(f"{name},{us},{derived}")
+                report_rows.append({
+                    "name": name,
+                    "us_per_call": float(us),
+                    "metrics": _parse_metrics(derived),
+                })
         except Exception:
             failed.append(modname)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        import jax
+        report = {
+            "schema_version": 1,
+            "host_backend": jax.default_backend(),
+            "modules": ran,
+            "rows": report_rows,
+            "summary": _summarize(report_rows),
+        }
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=1, sort_keys=True)
+        print(f"wrote {args.json} ({len(report_rows)} rows)", file=sys.stderr)
     if failed:
         raise SystemExit(f"benchmark modules failed: {failed}")
 

@@ -1,6 +1,6 @@
 """Core: the paper's contribution — co-designed BLAS — as a JAX library."""
 
-from repro.core import blas, dag, pe_model, tiling  # noqa: F401
+from repro.core import blas, dag, epilogue, pe_model, tiling  # noqa: F401
 from repro.core.blas import (  # noqa: F401
     axpy,
     dot,
@@ -9,8 +9,10 @@ from repro.core.blas import (  # noqa: F401
     gemv,
     get_backend,
     matmul,
+    matmul_fused,
     nrm2,
     scal,
     set_backend,
     use_backend,
 )
+from repro.core.epilogue import Epilogue  # noqa: F401

@@ -28,6 +28,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import epilogue as _epilogue
+from repro.core.epilogue import Epilogue
+
 _state = threading.local()
 _VALID = ("xla", "pallas", "ref")
 
@@ -56,6 +59,24 @@ def _acc_dtype(x: jnp.ndarray) -> jnp.dtype:
     # max(f32, operand dtype): low-precision inputs accumulate in f32 (MXU
     # style); f64 operands keep f64 accumulation (the D-prefix routines).
     return jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16, jnp.int8) else x.dtype
+
+
+def _epi_spec(epilogue, gate, bias, residual) -> Epilogue:
+    """Static spec from the user's epilogue arg (Epilogue | activation str |
+    None) + operand presence; flags always track the operands actually
+    passed so the spec cannot claim data that is not there."""
+    return _epilogue.make(
+        _epilogue.as_epilogue(epilogue).activation,
+        bias=bias, gate=gate, residual=residual,
+    )
+
+
+def _check_no_blas_params(epi: Epilogue, alpha, beta, C, what: str) -> None:
+    if not epi.is_identity and (alpha != 1.0 or beta != 0.0 or C is not None):
+        raise ValueError(
+            f"{what}: alpha/beta/C accumulate-scaling cannot be combined with a "
+            "fused epilogue (apply one or the other)"
+        )
 
 
 # --------------------------------------------------------------------------
@@ -149,20 +170,42 @@ def gemm(
     beta=0.0,
     transpose_a: bool = False,
     transpose_b: bool = False,
+    B2: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    residual: Optional[jnp.ndarray] = None,
+    epilogue=None,
 ) -> jnp.ndarray:
-    """dgemm: C = alpha * op(A) op(B) + beta * C.
+    """dgemm: C = alpha * op(A) op(B) + beta * C — or, with an epilogue,
+    C = epilogue(op(A) op(B) [, op(A) op(B2)]) fused into the kernel flush.
 
+    `epilogue` is an `Epilogue` spec or an activation name ("silu"/"gelu"/
+    "relu"); `bias` (n,), `residual` (m, n) and the dual-GEMM gate operand
+    `B2` ride along and are applied to the f32 accumulator before the
+    single HBM write (pallas) or in f32 before the output cast (xla/ref).
     2-D operands only; for the model-layer entry point with leading batch
-    dims use `matmul` below.
+    dims use `matmul` / `matmul_fused` below.
     """
     if transpose_a:
         A = A.T
     if transpose_b:
         B = B.T
+        if B2 is not None:
+            B2 = B2.T
+    epi = _epi_spec(epilogue, B2, bias, residual)
+    _check_no_blas_params(epi, alpha, beta, C, "gemm")
     backend = get_backend()
     if backend == "pallas":
         from repro.kernels import ops
-        out = ops.gemm(A, B)
+        out = ops.gemm(A, B, b2=B2, bias=bias, residual=residual,
+                       activation=epi.activation)
+    elif not epi.is_identity:
+        # xla/ref fused fallback: accumulate in max(f32, dtype), apply the
+        # identical epilogue semantic, cast once — same math, no kernel
+        acc = _acc_dtype(A)
+        h = jnp.dot(A, B, preferred_element_type=acc).astype(acc)
+        h2 = (jnp.dot(A, B2, preferred_element_type=acc).astype(acc)
+              if epi.gate else None)
+        out = epi.apply(h, acc2=h2, bias=bias, residual=residual).astype(A.dtype)
     elif backend == "ref":
         from repro.kernels import ref
         out = ref.gemm(A, B)
@@ -186,6 +229,10 @@ def batched_gemm(
     transpose_a: bool = False,
     transpose_b: bool = False,
     out_dtype=None,
+    B2: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    residual: Optional[jnp.ndarray] = None,
+    epilogue=None,
 ) -> jnp.ndarray:
     """Batched dgemm: C[b] = alpha * op(A[b]) op(B[b]) + beta * C[b].
 
@@ -193,15 +240,33 @@ def batched_gemm(
     folds the batch into the kernel grid instead of looping N tiny GEMMs.
     A 2-D B is broadcast across the batch — the shared-weight serving case,
     where the kernel fetches each B tile once and reuses it per batch member.
+
+    The fused-epilogue args mirror `gemm`: `B2` (same layout as B) is the
+    dual-GEMM gate operand — with epilogue="silu" this computes the whole
+    MoE-expert SwiGLU silu(A@B) * (A@B2) in one launch; `bias` is (n,),
+    `residual` (batch, m, n).
     """
     if transpose_a:
         A = jnp.swapaxes(A, -2, -1)
     if transpose_b:
         B = jnp.swapaxes(B, -2, -1)
+        if B2 is not None:
+            B2 = jnp.swapaxes(B2, -2, -1)
+    epi = _epi_spec(epilogue, B2, bias, residual)
+    _check_no_blas_params(epi, alpha, beta, C, "batched_gemm")
     backend = get_backend()
     if backend == "pallas":
         from repro.kernels import ops
-        out = ops.bgemm(A, B, out_dtype=out_dtype)
+        out = ops.bgemm(A, B, b2=B2, bias=bias, residual=residual,
+                        activation=epi.activation, out_dtype=out_dtype)
+    elif not epi.is_identity:
+        acc = _acc_dtype(A)
+        h = jnp.matmul(A, B, preferred_element_type=acc).astype(acc)
+        h2 = (jnp.matmul(A, B2, preferred_element_type=acc).astype(acc)
+              if epi.gate else None)
+        out = epi.apply(h, acc2=h2, bias=bias, residual=residual).astype(
+            out_dtype or A.dtype
+        )
     elif backend == "ref":
         from repro.kernels import ref
         out = ref.bgemm(A, B, out_dtype=out_dtype)
@@ -230,21 +295,26 @@ def batched_gemv(
     N of them into one launch is the classic fix.  A 2-D A is broadcast —
     the batched-decode case where every request multiplies the same weights,
     so A traffic amortizes over the batch.
+
+    Under the pallas backend, trans=True is pushed into the kernel
+    (`transpose_a`): the weight streams in its HBM layout instead of being
+    materialized transposed on every call.
     """
-    if trans:
-        A = jnp.swapaxes(A, -2, -1)
     backend = get_backend()
     if backend == "pallas":
         from repro.kernels import ops
-        out = ops.bgemv(A, x)
-    elif backend == "ref":
-        from repro.kernels import ref
-        out = ref.bgemv(A, x)
+        out = ops.bgemv(A, x, transpose_a=trans)
     else:
-        acc = _acc_dtype(A)
-        out = jnp.matmul(
-            A.astype(acc), x[..., None].astype(acc)
-        )[..., 0].astype(A.dtype)
+        if trans:
+            A = jnp.swapaxes(A, -2, -1)
+        if backend == "ref":
+            from repro.kernels import ref
+            out = ref.bgemv(A, x)
+        else:
+            acc = _acc_dtype(A)
+            out = jnp.matmul(
+                A.astype(acc), x[..., None].astype(acc)
+            )[..., 0].astype(A.dtype)
     out = scal(alpha, out)
     if y is not None and beta != 0.0:
         out = out + scal(beta, y)
@@ -272,12 +342,14 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
         xb = x.reshape(-1, rows, d)
         if rows == 1:
             # decode-shaped: one token per batch member -> batched GEMV with
-            # broadcast weights (y[b] = w^T x[b]); cast back to the activation
-            # dtype (bgemv's out dtype follows its first operand, here w).
+            # broadcast weights (y[b] = w^T x[b], transpose_a pushed into the
+            # kernel so w streams in its HBM layout instead of materializing
+            # w.T per decode step); cast back to the activation dtype
+            # (bgemv's out dtype follows its first operand, here w).
             # The continuous-batching serve scheduler keeps the slot grid at a
             # fixed batch size (inactive slots compute and are masked on the
             # host), so this path — one fused launch — holds at any occupancy.
-            out = ops.bgemv(w.T, xb[:, 0, :]).astype(x.dtype)
+            out = ops.bgemv(w, xb[:, 0, :], transpose_a=True).astype(x.dtype)
             return out.reshape(*lead, w.shape[-1])
         out = ops.bgemm(xb, w)
         return out.reshape(*lead, w.shape[-1])
@@ -289,6 +361,61 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
             # all-reduce (per-shard MXU accumulation is f32 regardless)
             acc = jnp.bfloat16
     return jnp.dot(x, w, preferred_element_type=acc).astype(x.dtype)
+
+
+def matmul_fused(
+    x: jnp.ndarray,               # (..., d)
+    w: jnp.ndarray,               # (d, f)
+    *,
+    w2: Optional[jnp.ndarray] = None,        # (d, f) dual-GEMM gate operand
+    bias: Optional[jnp.ndarray] = None,      # (f,)
+    residual: Optional[jnp.ndarray] = None,  # (..., f)
+    activation: Optional[str] = None,        # "silu" | "gelu" | "relu"
+) -> jnp.ndarray:
+    """Model-layer projection with the epilogue fused into the kernel flush.
+
+        y = epilogue(x @ w [, x @ w2])
+          = act(x @ w + bias) [* (x @ w2)] [+ residual]
+
+    so a SwiGLU layer is one call — `matmul_fused(x, w_gate, w2=w_up,
+    activation="silu")` — and a biased QKV projection is
+    `matmul_fused(x, wq, bias=bq)`.  Under the pallas backend each call is
+    ONE kernel launch and ONE HBM output write (gemm / bgemm / decode-shaped
+    bgemv with transpose_a, mirroring `matmul`'s routing); xla/ref apply the
+    identical epilogue semantic to the f32 accumulator before the single
+    output cast, so all backends agree to dtype tolerance.
+    """
+    epi = _epi_spec(activation, w2, bias, residual)
+    lead = x.shape[:-1]
+    f = w.shape[-1]
+    res = None if residual is None else residual.reshape(*lead, f)
+    backend = get_backend()
+    if backend == "pallas":
+        from repro.kernels import ops
+        if x.ndim <= 2:
+            x2 = x.reshape(-1, x.shape[-1])
+            r2 = None if res is None else res.reshape(x2.shape[0], f)
+            out = ops.gemm(x2, w, b2=w2, bias=bias, residual=r2,
+                           activation=epi.activation, out_dtype=x.dtype)
+            return out.reshape(*lead, f)
+        rows, d = x.shape[-2], x.shape[-1]
+        xb = x.reshape(-1, rows, d)
+        if rows == 1:
+            # decode-shaped: dual-GEMV with broadcast weights in HBM layout
+            # (transpose_a) — the whole decode-step SwiGLU is one launch
+            rb = None if res is None else res.reshape(-1, f)
+            out = ops.bgemv(w, xb[:, 0, :], a2=w2, bias=bias, residual=rb,
+                            transpose_a=True,
+                            activation=epi.activation).astype(x.dtype)
+            return out.reshape(*lead, f)
+        rb = None if res is None else res.reshape(-1, rows, f)
+        out = ops.bgemm(xb, w, b2=w2, bias=bias, residual=rb,
+                        activation=epi.activation, out_dtype=x.dtype)
+        return out.reshape(*lead, f)
+    acc = _acc_dtype(x)
+    h = jnp.dot(x, w, preferred_element_type=acc).astype(acc)
+    h2 = jnp.dot(x, w2, preferred_element_type=acc).astype(acc) if epi.gate else None
+    return epi.apply(h, acc2=h2, bias=bias, residual=res).astype(x.dtype)
 
 
 def einsum(subscripts: str, *operands: jnp.ndarray) -> jnp.ndarray:

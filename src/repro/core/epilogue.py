@@ -1,0 +1,112 @@
+"""Static epilogue specs for the fused GEMM family.
+
+The paper's PE reaches 74% of peak DGEMM because the accumulate-and-move
+step is fused into the datapath (DOT4 / AE2-AE3): partial results never
+round-trip local memory.  Our model layers were undoing exactly that at the
+layer boundary — `blas.matmul` wrote its output tile to HBM only for the
+next op (bias add, SiLU/GELU, residual add, SwiGLU gate multiply) to read
+it straight back.  An `Epilogue` declares that tail computation so the
+Pallas kernels can apply it to the f32 accumulator tile while it is still
+resident in VMEM, inside the last-k-step flush: one HBM write per layer op
+instead of 2-4.
+
+The spec is static (hashable, frozen) so it can be a jit static argument
+and drive kernel specialization; the operand data (bias vector, residual
+tensor, second GEMM operand for the gate) travels separately.  `apply` is
+the single semantic definition — kernels call it on VMEM tiles, the xla/ref
+backends call it on whole arrays, and tests use it to build unfused
+oracles, so the fused and unfused paths cannot drift apart.
+
+Epilogue order (all in accumulator precision, f32 for <=f32 operands, f64
+for the D-prefix routines):
+
+    h = acc + bias          (bias broadcast over rows)
+    h = activation(h)       (silu | gelu | relu)
+    h = h * acc2            (gate: dual-GEMM second accumulator, SwiGLU)
+    h = h + residual        (skip connection)
+
+so SwiGLU is `Epilogue(activation="silu", gate=True)` over the dual GEMM
+(x @ w_gate, x @ w_up), exactly `silu(x @ w_gate) * (x @ w_up)`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+#: activation name -> accumulator-precision callable
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda z: jax.nn.gelu(z, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """What the kernel does to the accumulator tile before the HBM write."""
+
+    activation: Optional[str] = None  # "silu" | "gelu" | "relu" | None
+    bias: bool = False       # a bias operand is present (added pre-activation)
+    gate: bool = False       # a second GEMM operand is present (dual-GEMM multiply)
+    residual: bool = False   # a residual operand is present (added last)
+
+    def __post_init__(self):
+        if self.activation is not None and self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"activation must be one of {sorted(ACTIVATIONS)}, got {self.activation!r}"
+            )
+
+    @property
+    def is_identity(self) -> bool:
+        return not (self.activation or self.bias or self.gate or self.residual)
+
+    def apply(self, acc, *, acc2=None, bias=None, residual=None):
+        """The epilogue semantic, in accumulator precision.
+
+        `acc` (and `acc2` under `gate`) are accumulator-dtype arrays; `bias`
+        and `residual` are cast up to it.  Works identically on a VMEM tile
+        inside a kernel and on a whole array in the xla/ref fallbacks.
+        """
+        h = acc
+        if self.bias:
+            h = h + bias.astype(h.dtype)
+        if self.activation is not None:
+            h = ACTIVATIONS[self.activation](h)
+        if self.gate:
+            h = h * acc2.astype(h.dtype)
+        if self.residual:
+            h = h + residual.astype(h.dtype)
+        return h
+
+
+def make(
+    activation: Optional[str] = None,
+    *,
+    bias=None,
+    gate=None,
+    residual=None,
+) -> Epilogue:
+    """Build the static spec from operand presence (args may be arrays or
+    bools); the wrappers in kernels/ops derive their jit-static spec here."""
+    return Epilogue(
+        activation=activation,
+        bias=bias is not None and bias is not False,
+        gate=gate is not None and gate is not False,
+        residual=residual is not None and residual is not False,
+    )
+
+
+def as_epilogue(spec) -> Epilogue:
+    """Coerce user input: an Epilogue passes through, a string is an
+    activation-only spec, None is identity."""
+    if spec is None:
+        return Epilogue()
+    if isinstance(spec, Epilogue):
+        return spec
+    if isinstance(spec, str):
+        return Epilogue(activation=spec)
+    raise TypeError(f"epilogue must be Epilogue | str | None, got {type(spec)}")

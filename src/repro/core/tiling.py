@@ -11,13 +11,25 @@ set  bm*bk + bk*bn + bm*bn (+ f32 accumulator)  must fit the VMEM budget.
 VMEM budget it picks the aspect ratio that maximises arithmetic intensity
 (flops per HBM byte), exactly the paper's argument for widening the
 FPS<->load-store path to the full block width.
+
+`autotune_block_shape` goes one step further, the way the paper tunes its
+blocking empirically per problem size (S5): rank the feasible candidates
+analytically, then *measure* the top-K on the live backend and keep the
+winner, persisted in a process + on-disk cache keyed by
+(op, shape, dtype, backend).  Measurement is opt-in (REPRO_AUTOTUNE=1)
+because it runs real kernels at first touch; without it the analytic
+best — identical to `choose_block_shape` — is served from the same cache.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
-from typing import Sequence
+import os
+import threading
+from pathlib import Path
+from typing import Callable, Optional, Sequence
 
 import jax.numpy as jnp
 
@@ -79,6 +91,68 @@ class BlockShape:
         return flops / bytes_moved
 
 
+def epilogue_vmem_bytes(blk: BlockShape, dtype_bytes: int, *,
+                        gate: bool = False, residual: bool = False) -> int:
+    """Extra per-grid-step VMEM a fused epilogue claims on top of
+    `BlockShape.vmem_bytes`: the dual-GEMM gate operand's double-buffered
+    tile + its f32 accumulator, and the double-buffered residual tile
+    (the bias row is negligible)."""
+    extra = 0
+    if gate:
+        extra += 2 * blk.bk * blk.bn * dtype_bytes + blk.bm * blk.bn * 4
+    if residual:
+        extra += 2 * blk.bm * blk.bn * dtype_bytes
+    return extra
+
+
+def rank_block_shapes(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    dtype_bytes: int = 2,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    candidates: Sequence[int] = (128, 256, 512, 1024, 2048),
+    top_k: Optional[int] = None,
+    gate: bool = False,
+    residual: bool = False,
+) -> list[BlockShape]:
+    """All VMEM-feasible MXU-aligned block shapes, best analytic guess first.
+
+    Ordering is by arithmetic intensity (the AE4 argument), tie-broken by
+    larger bk (fewer k-steps => less accumulator traffic) then by iteration
+    order (smaller bm, bn) — the exact preference `choose_block_shape` has
+    always applied; rank[0] IS its answer.  `top_k` truncates the list (the
+    autotuner's measurement shortlist).  `gate`/`residual` charge the fused
+    epilogue's extra tiles (second operand double buffer + f32 accumulator,
+    residual double buffer) against the same budget, so a fused dual-GEMM
+    cannot be planned past the VMEM the plain GEMM was budgeted for.
+    """
+    ranked: list[tuple[float, int, int, int, BlockShape]] = []
+    for bm in candidates:
+        if bm > round_up(m, MXU_DIM):
+            continue
+        for bn in candidates:
+            if bn > round_up(n, MXU_DIM):
+                continue
+            for bk in candidates:
+                if bk > round_up(k, MXU_DIM):
+                    continue
+                cand = BlockShape(bm, bn, bk)
+                used = cand.vmem_bytes(dtype_bytes) + epilogue_vmem_bytes(
+                    cand, dtype_bytes, gate=gate, residual=residual
+                )
+                if used > vmem_budget:
+                    continue
+                ai = (2 * bm * bn * bk) / ((bm * bk + bk * bn) * dtype_bytes)
+                ranked.append((-ai, -bk, bm, bn, cand))
+    ranked.sort(key=lambda t: t[:4])
+    out = [t[4] for t in ranked]
+    if not out:  # tiny problem: single MXU tile
+        out = [BlockShape(MXU_DIM, MXU_DIM, MXU_DIM)]
+    return out[:top_k] if top_k else out
+
+
 def choose_block_shape(
     m: int,
     n: int,
@@ -93,28 +167,149 @@ def choose_block_shape(
     Mirrors the paper's AE4 reasoning: bigger blocks amortise the per-block
     handshake (here: DMA issue) and raise flops/byte; the ceiling is local
     memory (here: VMEM, incl. the double buffer the Pallas pipeline inserts).
+    This is the pure-analytic answer; `autotune_block_shape` layers empirical
+    measurement on top of the same candidate ranking.
     """
-    best = None
-    best_ai = -1.0
-    for bm in candidates:
-        if bm > round_up(m, MXU_DIM):
-            continue
-        for bn in candidates:
-            if bn > round_up(n, MXU_DIM):
-                continue
-            for bk in candidates:
-                if bk > round_up(k, MXU_DIM):
-                    continue
-                cand = BlockShape(bm, bn, bk)
-                if cand.vmem_bytes(dtype_bytes) > vmem_budget:
-                    continue
-                ai = (2 * bm * bn * bk) / ((bm * bk + bk * bn) * dtype_bytes)
-                # tie-break: prefer fewer k-steps (less accumulator traffic)
-                if ai > best_ai or (ai == best_ai and best and bk > best.bk):
-                    best_ai = ai
-                    best = cand
-    if best is None:  # tiny problem: single MXU tile
-        best = BlockShape(MXU_DIM, MXU_DIM, MXU_DIM)
+    return rank_block_shapes(
+        m, n, k, dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
+        candidates=candidates,
+    )[0]
+
+
+# --------------------------------------------------------------------------
+# Empirical block-shape autotuner (the paper's per-problem-size tuning, S5)
+# --------------------------------------------------------------------------
+
+AUTOTUNE_ENV = "REPRO_AUTOTUNE"              # "1" enables measurement
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"  # cache file path; "off" disables disk
+
+_DEFAULT_CACHE = Path.home() / ".cache" / "repro" / "autotune.json"
+_autotune_lock = threading.Lock()
+_autotune_cache: dict[str, dict] = {}  # process cache, mirrors the disk file
+_autotune_disk_loaded = False
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get(AUTOTUNE_ENV, "0") not in ("0", "", "false", "off")
+
+
+def _autotune_cache_path() -> Optional[Path]:
+    raw = os.environ.get(AUTOTUNE_CACHE_ENV)
+    if raw is not None:
+        return None if raw in ("", "off", "none") else Path(raw)
+    return _DEFAULT_CACHE
+
+
+def _load_disk_cache() -> None:
+    global _autotune_disk_loaded
+    if _autotune_disk_loaded:
+        return
+    _autotune_disk_loaded = True
+    path = _autotune_cache_path()
+    if path is None or not path.exists():
+        return
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return  # corrupt/unreadable cache: retune rather than crash
+    for key, ent in data.items():
+        # only measured winners are trusted from disk: analytic entries are
+        # recomputed so heuristic improvements are never masked by the cache
+        if (isinstance(ent, dict) and {"bm", "bn", "bk", "source"} <= set(ent)
+                and ent["source"] == "measured"):
+            _autotune_cache.setdefault(key, ent)
+
+
+def _store_disk_cache() -> None:
+    path = _autotune_cache_path()
+    if path is None:
+        return
+    measured = {k: e for k, e in _autotune_cache.items()
+                if e["source"] == "measured"}
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(measured, indent=1, sort_keys=True))
+    except OSError:
+        pass  # read-only FS: the process cache still works
+
+
+def clear_autotune_cache(disk: bool = False) -> None:
+    """Drop the process cache (tests; and after changing kernels).  With
+    disk=True also removes the on-disk file."""
+    global _autotune_disk_loaded
+    with _autotune_lock:
+        _autotune_cache.clear()
+        _autotune_disk_loaded = False
+        if disk:
+            path = _autotune_cache_path()
+            if path is not None and path.exists():
+                path.unlink()
+
+
+def autotune_cache_key(op: str, m: int, n: int, k: int, dtype_bytes: int,
+                       backend: str, *, gate: bool = False,
+                       residual: bool = False) -> str:
+    suffix = f":g{int(gate)}r{int(residual)}" if (gate or residual) else ""
+    return f"{op}:m{m}:n{n}:k{k}:dt{dtype_bytes}:{backend}{suffix}"
+
+
+def autotune_block_shape(
+    op: str,
+    m: int,
+    n: int,
+    k: int,
+    *,
+    dtype_bytes: int,
+    backend: str,
+    bench_fn: Optional[Callable[[BlockShape], float]] = None,
+    top_k: int = 4,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    gate: bool = False,
+    residual: bool = False,
+) -> BlockShape:
+    """Block shape for (op, m, n, k, dtype, backend), empirically tuned.
+
+    The analytic ranking supplies the shortlist; when tuning is enabled
+    (REPRO_AUTOTUNE=1) and a `bench_fn(block) -> seconds` is provided, the
+    top-K candidates are measured once and the winner is persisted (process
+    dict + JSON file at REPRO_AUTOTUNE_CACHE, default
+    ~/.cache/repro/autotune.json).  Only MEASURED winners touch the disk:
+    analytic picks are deterministic and recomputable, so persisting them
+    would just freeze a heuristic that later versions may improve.  Cached
+    analytic (process-local) entries are upgraded to measured ones the
+    first time tuning runs; measured entries are final for the key.
+    Without tuning this degrades to `choose_block_shape` behind the same
+    cache, so callers route through one function either way.
+
+    `gate`/`residual` describe the fused-epilogue variant being planned:
+    they charge the extra VMEM (see `rank_block_shapes`) and key the cache
+    separately, so a winner measured unfused is never served to a fused
+    call with a different working set.
+    """
+    key = autotune_cache_key(op, m, n, k, dtype_bytes, backend,
+                             gate=gate, residual=residual)
+    want_measured = autotune_enabled() and bench_fn is not None
+    with _autotune_lock:
+        _load_disk_cache()
+        ent = _autotune_cache.get(key)
+        if ent is not None and (ent["source"] == "measured" or not want_measured):
+            return BlockShape(ent["bm"], ent["bn"], ent["bk"])
+    shortlist = rank_block_shapes(
+        m, n, k, dtype_bytes=dtype_bytes, vmem_budget=vmem_budget, top_k=top_k,
+        gate=gate, residual=residual,
+    )
+    if want_measured:
+        timed = [(bench_fn(blk), i) for i, blk in enumerate(shortlist)]
+        best = shortlist[min(timed)[1]]
+        ent = {"bm": best.bm, "bn": best.bn, "bk": best.bk, "source": "measured",
+               "us": round(min(timed)[0] * 1e6, 3)}
+    else:
+        best = shortlist[0]
+        ent = {"bm": best.bm, "bn": best.bn, "bk": best.bk, "source": "analytic"}
+    with _autotune_lock:
+        _autotune_cache[key] = ent
+        if ent["source"] == "measured":
+            _store_disk_cache()
     return best
 
 
@@ -211,3 +406,58 @@ def plan_batched_gemm(
     return BatchedGridPlan(
         batch, m, n, k, choose_block_shape(m, n, k, **kw), broadcast_b
     )
+
+
+# --------------------------------------------------------------------------
+# Epilogue-fusion traffic model (what the fused flush buys, in HBM bytes)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerTraffic:
+    """Intermediate-tensor HBM traffic + launch count for one layer op chain.
+
+    Counts only the traffic fusion can remove: writes of intermediate
+    activations and the immediate read-back by the next op.  Operand/weight
+    streaming is identical fused and unfused, so it cancels out of the
+    comparison (bench_fused_epilogue reports both columns).
+    """
+
+    kernel_launches: int
+    hbm_writes: int   # bytes written (intermediates + final output)
+    hbm_reads: int    # bytes of intermediates read straight back
+
+    @property
+    def round_trips(self) -> int:
+        return self.hbm_writes + self.hbm_reads
+
+
+def mlp_traffic(
+    m: int, d_model: int, d_ff: int, *, dtype_bytes: int = 2,
+    fused: bool, kind: str = "swiglu",
+) -> LayerTraffic:
+    """HBM traffic for one MLP forward over m tokens.
+
+    Unfused SwiGLU is the paper's anti-pattern measured three times over:
+    gate = x@Wg, up = x@Wu, mid = silu(gate)*up each write an (m, d_ff)
+    tensor to HBM that the very next op reads straight back.  The fused
+    dual-GEMM epilogue computes mid inside the flush (one write), and the
+    down projection is one more GEMM — 2 launches and 2 output writes total
+    against 4+ launches and 4 writes/3 read-backs.
+    """
+    mid = m * d_ff * dtype_bytes   # one (m, d_ff) intermediate
+    out = m * d_model * dtype_bytes
+    if kind in ("swiglu", "geglu"):
+        if fused:
+            # launch 1: dual-GEMM + gate epilogue -> mid; launch 2: down proj
+            return LayerTraffic(kernel_launches=2, hbm_writes=mid + out,
+                                hbm_reads=mid)
+        # gate GEMM, up GEMM, elementwise silu*mul, down GEMM
+        return LayerTraffic(kernel_launches=4, hbm_writes=3 * mid + out,
+                            hbm_reads=2 * mid + mid)
+    # two-matrix MLP (bias+gelu): fused = [up+bias+gelu] -> [down+bias]
+    if fused:
+        return LayerTraffic(kernel_launches=2, hbm_writes=mid + out,
+                            hbm_reads=mid)
+    # up GEMM, bias+gelu elementwise, down GEMM, bias elementwise
+    return LayerTraffic(kernel_launches=4, hbm_writes=2 * mid + 2 * out,
+                        hbm_reads=mid + mid + out)

@@ -23,7 +23,11 @@ Two B layouts:
     broadcast layout avoids materializing batch copies of B in HBM.
 
 Per-batch-member f32 VMEM accumulator, flushed on the last k step, exactly
-like the single GEMM kernel (the accumulate term never touches HBM).
+like the single GEMM kernel (the accumulate term never touches HBM).  The
+last-k-step flush also applies the fused epilogue (core.epilogue): bias,
+activation, residual and the dual-GEMM gate multiply (`b2`, e.g. the MoE
+expert SwiGLU where every expert's silu(h@Wg)*(h@Wu) is one launch) run on
+the VMEM-resident accumulator instead of round-tripping HBM per op.
 """
 
 from __future__ import annotations
@@ -35,44 +39,70 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.epilogue import Epilogue
 from repro.kernels import _compat
+from repro.kernels.gemm import epi_operands_match
 
 
-def _bgemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, b_batched: bool):
+def _bgemm_kernel(a_ref, b_ref, *refs, nk: int, b_batched: bool, epi: Epilogue):
+    # refs: [b2] [bias] [residual] o acc [acc2]
+    refs = list(refs)
+    b2_ref = refs.pop(0) if epi.gate else None
+    bias_ref = refs.pop(0) if epi.bias else None
+    res_ref = refs.pop(0) if epi.residual else None
+    o_ref, acc_ref = refs[0], refs[1]
+    acc2_ref = refs[2] if epi.gate else None
+
     k = pl.program_id(3)  # grid (m/bm, n/bn, batch, k/bk): k innermost
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if epi.gate:
+            acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
+    a_tile = a_ref[0]
     b_tile = b_ref[0] if b_batched else b_ref[...]
-    acc_ref[...] += jnp.dot(
-        a_ref[0], b_tile, preferred_element_type=acc_ref.dtype
-    )
+    acc_ref[...] += jnp.dot(a_tile, b_tile, preferred_element_type=acc_ref.dtype)
+    if epi.gate:
+        b2_tile = b2_ref[0] if b_batched else b2_ref[...]
+        acc2_ref[...] += jnp.dot(a_tile, b2_tile, preferred_element_type=acc_ref.dtype)
 
     @pl.when(k == nk - 1)
     def _flush():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+        h = epi.apply(
+            acc_ref[...],
+            acc2=acc2_ref[...] if epi.gate else None,
+            bias=bias_ref[...] if epi.bias else None,       # (1, bn) broadcasts
+            residual=res_ref[0] if epi.residual else None,  # (bm, bn)
+        )
+        o_ref[0] = h.astype(o_ref.dtype)
 
 
 def bgemm(
     a: jnp.ndarray,  # (batch, m, k)
     b: jnp.ndarray,  # (batch, k, n) or (k, n) broadcast across the batch
     *,
+    b2: jnp.ndarray = None,        # same layout as b: dual-GEMM gate operand
+    bias: jnp.ndarray = None,      # (1, n) broadcast across batch and rows
+    residual: jnp.ndarray = None,  # (batch, m, n)
+    epilogue: Epilogue = Epilogue(),
     block_m: int = 256,
     block_n: int = 256,
     block_k: int = 512,
     out_dtype=None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """C[b] = A[b] @ B[b] (or A[b] @ B for 2-D B).  Dims must divide the
-    blocks (ops.bgemm pads first — the paper's DOT2/DOT3 fringe handling)."""
+    """C[b] = epilogue(A[b] @ B[b] [, A[b] @ B2[b]]) (2-D B/B2 broadcast).
+    Dims must divide the blocks (ops.bgemm pads first — the paper's
+    DOT2/DOT3 fringe handling)."""
     batch, m, ka = a.shape
     b_batched = b.ndim == 3
     kb, n = b.shape[-2:]
     assert ka == kb, (a.shape, b.shape)
     if b_batched:
         assert b.shape[0] == batch, (a.shape, b.shape)
+    assert epi_operands_match(epilogue, b2, bias, residual)
     block_m, block_n, block_k = (min(block_m, m), min(block_n, n), min(block_k, ka))
     assert m % block_m == 0 and n % block_n == 0 and ka % block_k == 0, (
         (batch, m, n, ka),
@@ -82,25 +112,46 @@ def bgemm(
     # member, then advance the member — so a broadcast-B tile with nk == 1
     # keeps a constant index across the whole batch (fetched once per (i, j)).
     grid = (m // block_m, n // block_n, batch, ka // block_k)
-    kernel = functools.partial(_bgemm_kernel, nk=grid[3], b_batched=b_batched)
+    kernel = functools.partial(
+        _bgemm_kernel, nk=grid[3], b_batched=b_batched, epi=epilogue
+    )
     if b_batched:
         b_spec = pl.BlockSpec((1, block_k, block_n), lambda i, j, bi, k: (bi, k, j))
     else:
         # index_map drops the batch coordinate: the broadcast-B serving case.
         b_spec = pl.BlockSpec((block_k, block_n), lambda i, j, bi, k: (k, j))
+    # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMM proper)
+    acc_dtype = jnp.promote_types(jnp.float32, a.dtype)
+    operands = [a, b]
+    in_specs = [
+        pl.BlockSpec((1, block_m, block_k), lambda i, j, bi, k: (bi, i, k)),
+        b_spec,
+    ]
+    scratch = [pltpu.VMEM((block_m, block_n), acc_dtype)]
+    if epilogue.gate:
+        assert b2.shape == b.shape, (b.shape, b2.shape)
+        operands.append(b2)
+        in_specs.append(b_spec)
+        scratch.append(pltpu.VMEM((block_m, block_n), acc_dtype))
+    if epilogue.bias:
+        assert bias.shape == (1, n), (bias.shape, n)
+        operands.append(bias)
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, bi, k: (0, j)))
+    if epilogue.residual:
+        assert residual.shape == (batch, m, n), (residual.shape, (batch, m, n))
+        operands.append(residual)
+        in_specs.append(
+            pl.BlockSpec((1, block_m, block_n), lambda i, j, bi, k: (bi, i, j))
+        )
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_m, block_k), lambda i, j, bi, k: (bi, i, k)),
-            b_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_m, block_n), lambda i, j, bi, k: (bi, i, j)),
         out_shape=jax.ShapeDtypeStruct((batch, m, n), out_dtype or a.dtype),
-        # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMM proper)
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.promote_types(jnp.float32, a.dtype))],
+        scratch_shapes=scratch,
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(a, b)
+    )(*operands)

@@ -18,6 +18,18 @@ Two A layouts:
     traffic from O(1) to O(batch).  Wider weights refetch per member (the
     pipeline only elides DMAs between consecutive steps) but still avoid
     batch copies of W in HBM.
+
+transpose_a=True computes y[b] = A^T x[b] by swapping the tile index map
+(the A tile is loaded as (bn, bk-rows) and contracted over rows) — the
+model-layer decode projection x @ W is exactly W^T x, and this flag lets it
+stream W in its HBM layout instead of materializing W.T on every decode
+step.
+
+The last-n-step flush applies the fused epilogue (core.epilogue): bias,
+activation, residual and the dual-GEMV gate multiply (`a2`: a second weight
+matrix with its own accumulator, so a decode-step SwiGLU
+silu(W_g^T x) * (W_u^T x) is one launch) run on the VMEM-resident
+accumulator before the single HBM write.
 """
 
 from __future__ import annotations
@@ -29,65 +41,139 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.epilogue import Epilogue
 from repro.kernels import _compat
+from repro.kernels.gemm import epi_operands_match
 
 
-def _bgemv_kernel(a_ref, x_ref, o_ref, acc_ref, *, nn: int, a_batched: bool):
+def _bgemv_kernel(
+    a_ref, x_ref, *refs, nn: int, a_batched: bool, trans: bool, epi: Epilogue
+):
+    # refs: [a2] [bias] [residual] o acc [acc2]
+    refs = list(refs)
+    a2_ref = refs.pop(0) if epi.gate else None
+    bias_ref = refs.pop(0) if epi.bias else None
+    res_ref = refs.pop(0) if epi.residual else None
+    o_ref, acc_ref = refs[0], refs[1]
+    acc2_ref = refs[2] if epi.gate else None
+
     j = pl.program_id(2)  # grid (m/bm, batch, n/bn): n sweep innermost
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if epi.gate:
+            acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
-    a = (a_ref[0] if a_batched else a_ref[...]).astype(acc_ref.dtype)  # (bm, bn)
-    x = x_ref[0].astype(acc_ref.dtype)                                 # (1, bn)
-    acc_ref[...] += jnp.sum(a * x, axis=1, keepdims=True)            # (bm, 1)
+    x = x_ref[0].astype(acc_ref.dtype)  # (1, bn)
+
+    def contract(ref):
+        a = (ref[0] if a_batched else ref[...]).astype(acc_ref.dtype)
+        if trans:
+            # a is (bn, bm): contract over rows -> (1, bm)
+            return jnp.sum(a * x[0][:, None], axis=0, keepdims=True)
+        # a is (bm, bn): contract over cols -> (bm, 1)
+        return jnp.sum(a * x, axis=1, keepdims=True)
+
+    acc_ref[...] += contract(a_ref)
+    if epi.gate:
+        acc2_ref[...] += contract(a2_ref)
 
     @pl.when(j == nn - 1)
     def _flush():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+        h = epi.apply(
+            acc_ref[...],
+            acc2=acc2_ref[...] if epi.gate else None,
+            bias=bias_ref[...] if epi.bias else None,       # (bm,1) / (1,bm)
+            residual=res_ref[0] if epi.residual else None,
+        )
+        o_ref[0] = h.astype(o_ref.dtype)
 
 
 def bgemv(
-    a: jnp.ndarray,  # (batch, m, n) or (m, n) broadcast across the batch
+    a: jnp.ndarray,  # ((batch,) m, n), or ((batch,) n, m) when transpose_a
     x: jnp.ndarray,  # (batch, n)
     *,
+    a2: jnp.ndarray = None,        # same layout as a: dual-GEMV gate operand
+    bias: jnp.ndarray = None,      # (m, 1), or (1, m) when transpose_a
+    residual: jnp.ndarray = None,  # (batch, m, 1), or (batch, 1, m) when transpose_a
+    epilogue: Epilogue = Epilogue(),
+    transpose_a: bool = False,
     block_m: int = 512,
     block_n: int = 512,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """y[b] = A[b] @ x[b] (or A @ x[b] for 2-D A) -> (batch, m)."""
+    """y[b] = epilogue(op(A[b]) @ x[b] [, op(A2[b]) @ x[b]]) -> (batch, m);
+    2-D A broadcasts, op = A^T under transpose_a."""
     a_batched = a.ndim == 3
-    m, n = a.shape[-2:]
+    if transpose_a:
+        n, m = a.shape[-2:]
+    else:
+        m, n = a.shape[-2:]
     batch, nx = x.shape
     assert nx == n, (a.shape, x.shape)
     if a_batched:
         assert a.shape[0] == batch, (a.shape, x.shape)
+    assert epi_operands_match(epilogue, a2, bias, residual)
+    if a2 is not None:
+        assert a2.shape == a.shape, (a.shape, a2.shape)
     block_m, block_n = min(block_m, m), min(block_n, n)
     assert m % block_m == 0 and n % block_n == 0, ((m, n), (block_m, block_n))
     # batch between the row block and the n sweep: a broadcast-A tile with
     # nn == 1 keeps a constant index across consecutive batch steps, so each
     # W row block is fetched once for the whole batch.
     grid = (m // block_m, batch, n // block_n)
-    kernel = functools.partial(_bgemv_kernel, nn=grid[2], a_batched=a_batched)
-    if a_batched:
-        a_spec = pl.BlockSpec((1, block_m, block_n), lambda i, bi, j: (bi, i, j))
+    kernel = functools.partial(
+        _bgemv_kernel, nn=grid[2], a_batched=a_batched, trans=transpose_a,
+        epi=epilogue,
+    )
+    # tile/accumulator orientation follows the A layout: (bm, bn) tiles with
+    # a (bm, 1) accumulator, or (bn, bm) tiles with a (1, bm) accumulator
+    # under transpose_a (no transposition inside the kernel datapath).
+    if transpose_a:
+        a_block, a_idx = (block_n, block_m), lambda i, bi, j: (j, i)
+        ab_block, ab_idx = (1, block_n, block_m), lambda i, bi, j: (bi, j, i)
+        acc_shape, bias_shape = (1, block_m), (1, m)
+        out_shape, out_block = (batch, 1, m), (1, 1, block_m)
+        out_idx = lambda i, bi, j: (bi, 0, i)
+        bias_block, bias_idx = (1, block_m), (lambda i, bi, j: (0, i))
     else:
-        a_spec = pl.BlockSpec((block_m, block_n), lambda i, bi, j: (i, j))
+        a_block, a_idx = (block_m, block_n), lambda i, bi, j: (i, j)
+        ab_block, ab_idx = (1, block_m, block_n), lambda i, bi, j: (bi, i, j)
+        acc_shape, bias_shape = (block_m, 1), (m, 1)
+        out_shape, out_block = (batch, m, 1), (1, block_m, 1)
+        out_idx = lambda i, bi, j: (bi, i, 0)
+        bias_block, bias_idx = (block_m, 1), (lambda i, bi, j: (i, 0))
+    a_spec = (
+        pl.BlockSpec(ab_block, ab_idx) if a_batched else pl.BlockSpec(a_block, a_idx)
+    )
+    # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMV proper)
+    acc_dtype = jnp.promote_types(jnp.float32, a.dtype)
+    operands = [a, x[:, None, :]]
+    in_specs = [a_spec, pl.BlockSpec((1, 1, block_n), lambda i, bi, j: (bi, 0, j))]
+    scratch = [pltpu.VMEM(acc_shape, acc_dtype)]
+    if epilogue.gate:
+        operands.append(a2)
+        in_specs.append(a_spec)
+        scratch.append(pltpu.VMEM(acc_shape, acc_dtype))
+    if epilogue.bias:
+        assert bias.shape == bias_shape, (bias.shape, bias_shape)
+        operands.append(bias)
+        in_specs.append(pl.BlockSpec(bias_block, bias_idx))
+    if epilogue.residual:
+        assert residual.shape == out_shape, (residual.shape, out_shape)
+        operands.append(residual)
+        in_specs.append(pl.BlockSpec(out_block, out_idx))
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            a_spec,
-            pl.BlockSpec((1, 1, block_n), lambda i, bi, j: (bi, 0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, block_m, 1), lambda i, bi, j: (bi, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((batch, m, 1), a.dtype),
-        # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMV proper)
-        scratch_shapes=[pltpu.VMEM((block_m, 1), jnp.promote_types(jnp.float32, a.dtype))],
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(out_block, out_idx),
+        out_shape=jax.ShapeDtypeStruct(out_shape, a.dtype),
+        scratch_shapes=scratch,
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(a, x[:, None, :])
-    return out[:, :, 0]
+    )(*operands)
+    return out[:, 0, :] if transpose_a else out[:, :, 0]

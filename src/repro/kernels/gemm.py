@@ -15,6 +15,13 @@ Co-design correspondence (DESIGN.md S2):
 The kernel accumulates in an f32 VMEM scratch tile and writes the output
 tile once on the last k step — the accumulate-move the paper counts as its
 third n^3 flop term happens entirely inside VMEM, never touching HBM.
+
+Epilogue fusion (core.epilogue) extends that last-k-step flush: bias add,
+silu/gelu/relu activation, residual add and the dual-GEMM gate multiply
+(`b2`: a second right-hand side accumulated into its own VMEM scratch, so
+SwiGLU's silu(A@Wg) * (A@Wu) is one launch) all run on the f32 accumulator
+tile while it is still VMEM-resident.  A fused layer op writes its output
+to HBM once instead of round-tripping every intermediate.
 """
 
 from __future__ import annotations
@@ -26,60 +33,111 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.epilogue import Epilogue
 from repro.kernels import _compat
 
 
-def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+def _gemm_kernel(a_ref, b_ref, *refs, nk: int, epi: Epilogue):
+    # refs: [b2] [bias] [residual] o acc [acc2] — presence driven by the
+    # static epilogue spec, so each variant compiles its own minimal kernel.
+    refs = list(refs)
+    b2_ref = refs.pop(0) if epi.gate else None
+    bias_ref = refs.pop(0) if epi.bias else None
+    res_ref = refs.pop(0) if epi.residual else None
+    o_ref, acc_ref = refs[0], refs[1]
+    acc2_ref = refs[2] if epi.gate else None
+
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if epi.gate:
+            acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
-    acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=acc_ref.dtype
-    )
+    a = a_ref[...]
+    acc_ref[...] += jnp.dot(a, b_ref[...], preferred_element_type=acc_ref.dtype)
+    if epi.gate:
+        acc2_ref[...] += jnp.dot(a, b2_ref[...], preferred_element_type=acc_ref.dtype)
 
     @pl.when(k == nk - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        h = epi.apply(
+            acc_ref[...],
+            acc2=acc2_ref[...] if epi.gate else None,
+            bias=bias_ref[...] if epi.bias else None,       # (1, bn) broadcasts
+            residual=res_ref[...] if epi.residual else None,
+        )
+        o_ref[...] = h.astype(o_ref.dtype)
 
 
 def gemm(
     a: jnp.ndarray,  # (m, k)
     b: jnp.ndarray,  # (k, n)
     *,
+    b2: jnp.ndarray = None,        # (k, n) dual-GEMM gate operand
+    bias: jnp.ndarray = None,      # (1, n)
+    residual: jnp.ndarray = None,  # (m, n)
+    epilogue: Epilogue = Epilogue(),
     block_m: int = 256,
     block_n: int = 256,
     block_k: int = 512,
     out_dtype=None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """C = A @ B with explicit VMEM tiling.  Dims must divide the blocks
-    (ops.gemm pads first — the paper's DOT2/DOT3 fringe handling)."""
+    """C = epilogue(A @ B [, A @ B2]) with explicit VMEM tiling.  Dims must
+    divide the blocks (ops.gemm pads first — the paper's DOT2/DOT3 fringe
+    handling)."""
     m, ka = a.shape
     kb, n = b.shape
     assert ka == kb, (a.shape, b.shape)
+    assert epi_operands_match(epilogue, b2, bias, residual)
     block_m, block_n, block_k = (min(block_m, m), min(block_n, n), min(block_k, ka))
     assert m % block_m == 0 and n % block_n == 0 and ka % block_k == 0, (
         (m, n, ka),
         (block_m, block_n, block_k),
     )
     grid = (m // block_m, n // block_n, ka // block_k)
-    kernel = functools.partial(_gemm_kernel, nk=grid[2])
+    kernel = functools.partial(_gemm_kernel, nk=grid[2], epi=epilogue)
+    # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMM proper)
+    acc_dtype = jnp.promote_types(jnp.float32, a.dtype)
+    operands = [a, b]
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+    ]
+    scratch = [pltpu.VMEM((block_m, block_n), acc_dtype)]
+    if epilogue.gate:
+        assert b2.shape == b.shape, (b.shape, b2.shape)
+        operands.append(b2)
+        in_specs.append(pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)))
+        scratch.append(pltpu.VMEM((block_m, block_n), acc_dtype))
+    if epilogue.bias:
+        assert bias.shape == (1, n), (bias.shape, n)
+        operands.append(bias)
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)))
+    if epilogue.residual:
+        assert residual.shape == (m, n), (residual.shape, (m, n))
+        operands.append(residual)
+        in_specs.append(pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype or a.dtype),
-        # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMM proper)
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.promote_types(jnp.float32, a.dtype))],
+        scratch_shapes=scratch,
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(a, b)
+    )(*operands)
+
+
+def epi_operands_match(epi: Epilogue, gate_op, bias, residual) -> bool:
+    """Spec flags and operand presence must agree (shared by the kernels)."""
+    return (
+        epi.gate == (gate_op is not None)
+        and epi.bias == (bias is not None)
+        and epi.residual == (residual is not None)
+    )

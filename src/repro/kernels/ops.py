@@ -1,23 +1,34 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Public wrappers for the Pallas kernels.
 
 Responsibilities:
   - shape padding to hardware tiles (the paper's DOT2/DOT3 fringe handling,
     done once here so the kernels stay divisibility-clean);
-  - block-shape selection via core.tiling (the AE4 bandwidth argument);
+  - block-shape selection via core.tiling — `tiling.autotune_block_shape`,
+    the AE4 analytic ranking plus (REPRO_AUTOTUNE=1) empirical measurement
+    of the top-K candidates, cached per (op, shape, dtype, backend);
+  - fused-epilogue plumbing (core.epilogue): bias/activation/residual and
+    the dual-GEMM gate operand travel alongside the GEMM operands into the
+    kernels' last-k-step flush;
   - interpret-mode fallback on non-TPU hosts (this container is CPU-only;
     interpret=True executes the kernel bodies in Python for validation).
 
-Everything is wrapped in jax.jit with static block parameters so repeated
-calls hit the trace cache.
+Each public wrapper is a thin plan-resolving function over an inner jit'd
+call with static block parameters, so repeated calls hit the trace cache.
+Block resolution runs in Python: on an *eager* call the autotuner may
+benchmark candidates on the live backend; when the wrapper is traced inside
+an outer jit (operands are tracers) it serves the cached/analytic plan —
+run the op once eagerly (or a benchmark sweep) to warm the tune cache.
 """
 
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import epilogue as _epilogue
 from repro.core import tiling
 from repro.kernels import attention as _attention
 from repro.kernels import bgemm as _bgemm
@@ -37,16 +48,52 @@ def _interpret() -> bool:
     return not _on_tpu()
 
 
+def _epi_spec(activation, gate, bias, residual) -> _epilogue.Epilogue:
+    return _epilogue.make(activation, bias=bias, gate=gate, residual=residual)
+
+
+def _time_once(fn) -> float:
+    jax.block_until_ready(fn())  # compile + warm
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    dt1 = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return min(dt1, time.perf_counter() - t0)
+
+
+def _resolve_blocks(op, m, n, k, dtype, block_m, block_n, block_k,
+                    bench_factory, *, gate=False, residual=False):
+    """(block_m, block_n, block_k) for the call: explicit args win, else the
+    autotuned/analytic plan.  Benchmarks only run on eager calls (concrete
+    operands) with REPRO_AUTOTUNE=1; traced calls read the cache.  The
+    epilogue flags charge the fused variant's extra VMEM against the plan
+    budget and key its cache entries separately from the unfused op."""
+    if block_m is not None and block_n is not None and block_k is not None:
+        return block_m, block_n, block_k
+    bench_fn = bench_factory if (tiling.autotune_enabled() and
+                                 bench_factory is not None) else None
+    blk = tiling.autotune_block_shape(
+        op, m, n, k, dtype_bytes=dtype.itemsize,
+        backend=jax.default_backend(), bench_fn=bench_fn,
+        gate=gate, residual=residual,
+    )
+    return block_m or blk.bm, block_n or blk.bn, block_k or blk.bk
+
+
 # --------------------------------------------------------------------------
 # GEMM / GEMV
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
-def gemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m=256, block_n=256, block_k=256):
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "activation", "out_dtype"),
+)
+def _gemm_call(a, b, b2, bias, residual, *, block_m, block_n, block_k,
+               activation, out_dtype):
     m, k = a.shape
-    _, n = b.shape
-    if b.shape[0] != k:
-        raise ValueError(f"gemm shape mismatch: {a.shape} @ {b.shape}")
+    n = b.shape[1]
+    epi = _epi_spec(activation, b2, bias, residual)
     bm, bn, bk = (min(block_m, tiling.round_up(m, 8)),
                   min(block_n, tiling.round_up(n, 128)),
                   min(block_k, tiling.round_up(k, 128)))
@@ -54,15 +101,70 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m=256, block_n=256, block_k=25
     a, _ = tiling.pad_dim_to(a, 1, bk)
     b, _ = tiling.pad_dim_to(b, 0, bk)
     b, _ = tiling.pad_dim_to(b, 1, bn)
-    out = _gemm.gemm(a, b, block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
+    if b2 is not None:
+        b2, _ = tiling.pad_dim_to(b2, 0, bk)
+        b2, _ = tiling.pad_dim_to(b2, 1, bn)
+    if bias is not None:
+        bias, _ = tiling.pad_dim_to(bias.reshape(1, n), 1, bn)
+    if residual is not None:
+        residual, _ = tiling.pad_dim_to(residual, 0, bm)
+        residual, _ = tiling.pad_dim_to(residual, 1, bn)
+    out = _gemm.gemm(a, b, b2=b2, bias=bias, residual=residual, epilogue=epi,
+                     block_m=bm, block_n=bn, block_k=bk, out_dtype=out_dtype,
+                     interpret=_interpret())
     return out[:m, :n]
 
 
+def gemm(a: jnp.ndarray, b: jnp.ndarray, *, b2=None, bias=None, residual=None,
+         activation=None, block_m=None, block_n=None, block_k=None,
+         out_dtype=None):
+    """epilogue(a (m,k) @ b (k,n) [, a @ b2]) -> (m, n).
+
+    Block defaults come from `tiling.autotune_block_shape("gemm", ...)` at
+    the real operand width — the analytic AE4 plan, or the measured winner
+    when tuning is on.
+    """
+    m, k = a.shape
+    n = b.shape[1]
+    if b.shape[0] != k:
+        raise ValueError(f"gemm shape mismatch: {a.shape} @ {b.shape}")
+    _check_epilogue_shapes(b2, bias, residual, b.shape, (n,), (m, n))
+    tracer = isinstance(a, jax.core.Tracer)
+
+    def bench(blk):
+        # measure the variant actually being called: epilogue operands and
+        # all — an unfused winner can lose (or blow VMEM) once the dual-GEMM
+        # doubles the B stream and accumulators
+        za = jnp.zeros((m, k), a.dtype)
+        zb = jnp.zeros((k, n), b.dtype)
+        zb2 = None if b2 is None else jnp.zeros((k, n), b2.dtype)
+        zbias = None if bias is None else jnp.zeros((n,), bias.dtype)
+        zres = None if residual is None else jnp.zeros((m, n), residual.dtype)
+        return _time_once(lambda: _gemm_call(
+            za, zb, zb2, zbias, zres, block_m=blk.bm, block_n=blk.bn,
+            block_k=blk.bk, activation=activation, out_dtype=out_dtype))
+
+    bm, bn, bk = _resolve_blocks("gemm", m, n, k, a.dtype, block_m, block_n,
+                                 block_k, None if tracer else bench,
+                                 gate=b2 is not None,
+                                 residual=residual is not None)
+    return _gemm_call(a, b, b2, bias, residual, block_m=bm, block_n=bn,
+                      block_k=bk, activation=activation, out_dtype=out_dtype)
+
+
+def _check_epilogue_shapes(gate_op, bias, residual, gate_shape, bias_shape,
+                           res_shape):
+    if gate_op is not None and gate_op.shape != gate_shape:
+        raise ValueError(f"epilogue gate operand shape {gate_op.shape} != {gate_shape}")
+    if bias is not None and bias.shape != bias_shape:
+        raise ValueError(f"epilogue bias shape {bias.shape} != {bias_shape}")
+    if residual is not None and residual.shape != res_shape:
+        raise ValueError(f"epilogue residual shape {residual.shape} != {res_shape}")
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
-def gemv(a: jnp.ndarray, x: jnp.ndarray, *, block_m=512, block_n=512):
+def _gemv_call(a, x, *, block_m, block_n):
     m, n = a.shape
-    if x.shape[0] != n:
-        raise ValueError(f"gemv shape mismatch: {a.shape} @ {x.shape}")
     bm, bn = min(block_m, tiling.round_up(m, 8)), min(block_n, tiling.round_up(n, 128))
     a, _ = tiling.pad_dim_to(a, 0, bm)
     a, _ = tiling.pad_dim_to(a, 1, bn)
@@ -71,33 +173,39 @@ def gemv(a: jnp.ndarray, x: jnp.ndarray, *, block_m=512, block_n=512):
     return out[:m]
 
 
+def gemv(a: jnp.ndarray, x: jnp.ndarray, *, block_m=None, block_n=None):
+    """a (m, n) @ x (n,) -> (m,).  Block defaults route through
+    `tiling.plan_gemm` (via the autotune cache) at the real operand width —
+    the row block is the plan's bm, the streamed n sweep its bk."""
+    m, n = a.shape
+    if x.shape[0] != n:
+        raise ValueError(f"gemv shape mismatch: {a.shape} @ {x.shape}")
+    tracer = isinstance(a, jax.core.Tracer)
+
+    def bench(blk):
+        za, zx = jnp.zeros((m, n), a.dtype), jnp.zeros((n,), x.dtype)
+        return _time_once(lambda: _gemv_call(za, zx, block_m=blk.bm,
+                                             block_n=blk.bk))
+
+    # gemv is plan_gemm's (m, 1, n) cell: bm rows x bk streamed columns
+    bm, _, bn = _resolve_blocks("gemv", m, 1, n, a.dtype, block_m, 128,
+                                block_n, None if tracer else bench)
+    return _gemv_call(a, x, block_m=bm, block_n=bn)
+
+
 # --------------------------------------------------------------------------
 # Batched GEMM / GEMV (fused-launch batch execution layer)
 # --------------------------------------------------------------------------
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "block_k", "out_dtype")
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "activation", "out_dtype"),
 )
-def bgemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m=None, block_n=None,
-          block_k=None, out_dtype=None):
-    """a (batch, m, k) @ b ((batch,) k, n) -> (batch, m, n); 2-D b broadcasts.
-
-    Block shapes default to the core.tiling AE4 plan for the per-member
-    problem (the batch axis costs no extra VMEM).
-    """
+def _bgemm_call(a, b, b2, bias, residual, *, block_m, block_n, block_k,
+                activation, out_dtype):
     batch, m, k = a.shape
     n = b.shape[-1]
-    # validate BEFORE padding: pad_dim_to would silently absorb a k mismatch
-    if b.shape[-2] != k or (b.ndim == 3 and b.shape[0] != batch):
-        raise ValueError(f"bgemm shape mismatch: {a.shape} @ {b.shape}")
-    if block_m is None or block_n is None or block_k is None:
-        # plan under the REAL operand width: an f32/f64 tile may not claim
-        # the bf16 block's VMEM footprint
-        plan = tiling.plan_batched_gemm(batch, m, n, k, broadcast_b=b.ndim == 2,
-                                        dtype_bytes=a.dtype.itemsize)
-        block_m = block_m or plan.block.bm
-        block_n = block_n or plan.block.bn
-        block_k = block_k or plan.block.bk
+    epi = _epi_spec(activation, b2, bias, residual)
     bm, bn, bk = (min(block_m, tiling.round_up(m, 8)),
                   min(block_n, tiling.round_up(n, 128)),
                   min(block_k, tiling.round_up(k, 128)))
@@ -105,23 +213,116 @@ def bgemm(a: jnp.ndarray, b: jnp.ndarray, *, block_m=None, block_n=None,
     a, _ = tiling.pad_dim_to(a, 2, bk)
     b, _ = tiling.pad_dim_to(b, b.ndim - 2, bk)
     b, _ = tiling.pad_dim_to(b, b.ndim - 1, bn)
-    out = _bgemm.bgemm(a, b, block_m=bm, block_n=bn, block_k=bk,
+    if b2 is not None:
+        b2, _ = tiling.pad_dim_to(b2, b2.ndim - 2, bk)
+        b2, _ = tiling.pad_dim_to(b2, b2.ndim - 1, bn)
+    if bias is not None:
+        bias, _ = tiling.pad_dim_to(bias.reshape(1, n), 1, bn)
+    if residual is not None:
+        residual, _ = tiling.pad_dim_to(residual, 1, bm)
+        residual, _ = tiling.pad_dim_to(residual, 2, bn)
+    out = _bgemm.bgemm(a, b, b2=b2, bias=bias, residual=residual, epilogue=epi,
+                       block_m=bm, block_n=bn, block_k=bk,
                        out_dtype=out_dtype, interpret=_interpret())
     return out[:, :m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
-def bgemv(a: jnp.ndarray, x: jnp.ndarray, *, block_m=512, block_n=512):
-    """a ((batch,) m, n) @ x (batch, n) -> (batch, m); 2-D a broadcasts."""
-    m, n = a.shape[-2:]
+def bgemm(a: jnp.ndarray, b: jnp.ndarray, *, b2=None, bias=None, residual=None,
+          activation=None, block_m=None, block_n=None, block_k=None,
+          out_dtype=None):
+    """epilogue(a (batch,m,k) @ b ((batch,)k,n) [, a @ b2]) -> (batch, m, n);
+    2-D b/b2 broadcast.
+
+    Block shapes default to the per-member `tiling.autotune_block_shape`
+    plan (the batch axis costs no extra VMEM): analytic AE4 ranking, or the
+    measured winner when REPRO_AUTOTUNE=1.
+    """
+    batch, m, k = a.shape
+    n = b.shape[-1]
+    # validate BEFORE padding: pad_dim_to would silently absorb a k mismatch
+    if b.shape[-2] != k or (b.ndim == 3 and b.shape[0] != batch):
+        raise ValueError(f"bgemm shape mismatch: {a.shape} @ {b.shape}")
+    _check_epilogue_shapes(b2, bias, residual, b.shape, (n,), (batch, m, n))
+    tracer = isinstance(a, jax.core.Tracer)
+
+    def bench(blk):
+        # measure the fused variant actually being called (see ops.gemm)
+        za = jnp.zeros((batch, m, k), a.dtype)
+        zb = jnp.zeros(b.shape, b.dtype)
+        zb2 = None if b2 is None else jnp.zeros(b2.shape, b2.dtype)
+        zbias = None if bias is None else jnp.zeros((n,), bias.dtype)
+        zres = (None if residual is None
+                else jnp.zeros((batch, m, n), residual.dtype))
+        return _time_once(lambda: _bgemm_call(
+            za, zb, zb2, zbias, zres, block_m=blk.bm, block_n=blk.bn,
+            block_k=blk.bk, activation=activation, out_dtype=out_dtype))
+
+    # plan under the REAL operand width: an f32/f64 tile may not claim the
+    # bf16 block's VMEM footprint (key differs from "gemm": the batched grid
+    # amortizes broadcast-B fetches, so measured winners may differ too)
+    bm, bn, bk = _resolve_blocks("bgemm", m, n, k, a.dtype, block_m, block_n,
+                                 block_k, None if tracer else bench,
+                                 gate=b2 is not None,
+                                 residual=residual is not None)
+    return _bgemm_call(a, b, b2, bias, residual, block_m=bm, block_n=bn,
+                       block_k=bk, activation=activation, out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "activation", "transpose_a")
+)
+def _bgemv_call(a, x, a2, bias, residual, *, block_m, block_n, activation,
+                transpose_a):
+    if transpose_a:
+        n, m = a.shape[-2:]
+    else:
+        m, n = a.shape[-2:]
+    batch = x.shape[0]
+    epi = _epi_spec(activation, a2, bias, residual)
+    # under transpose_a the output dim m lives on the lane axis and the
+    # contraction n on sublanes, so the alignment constraints swap too
+    bm = min(block_m, tiling.round_up(m, 128 if transpose_a else 8))
+    bn = min(block_n, tiling.round_up(n, 8 if transpose_a else 128))
+    m_ax, n_ax = (a.ndim - 1, a.ndim - 2) if transpose_a else (a.ndim - 2, a.ndim - 1)
+    a, _ = tiling.pad_dim_to(a, m_ax, bm)
+    a, _ = tiling.pad_dim_to(a, n_ax, bn)
+    if a2 is not None:
+        a2, _ = tiling.pad_dim_to(a2, m_ax, bm)
+        a2, _ = tiling.pad_dim_to(a2, n_ax, bn)
+    x, _ = tiling.pad_dim_to(x, 1, bn)
+    if bias is not None:
+        bias = bias.reshape((1, m) if transpose_a else (m, 1))
+        bias, _ = tiling.pad_dim_to(bias, 1 if transpose_a else 0, bm)
+    if residual is not None:
+        residual = residual.reshape(
+            (batch, 1, m) if transpose_a else (batch, m, 1)
+        )
+        residual, _ = tiling.pad_dim_to(residual, 2 if transpose_a else 1, bm)
+    out = _bgemv.bgemv(a, x, a2=a2, bias=bias, residual=residual, epilogue=epi,
+                       transpose_a=transpose_a, block_m=bm, block_n=bn,
+                       interpret=_interpret())
+    return out[:, :m]
+
+
+def bgemv(a: jnp.ndarray, x: jnp.ndarray, *, a2=None, bias=None, residual=None,
+          activation=None, transpose_a=False, block_m=512, block_n=512):
+    """epilogue(op(a) @ x[b] [, op(a2) @ x[b]]) -> (batch, m).
+
+    a is ((batch,) m, n) — or ((batch,) n, m) under transpose_a, which
+    streams the weight in its HBM layout (op = A^T) instead of requiring a
+    materialized transpose; 2-D a broadcasts across the batch (the serving
+    decode case).  bias is (m,), residual (batch, m).
+    """
+    if transpose_a:
+        n, m = a.shape[-2:]
+    else:
+        m, n = a.shape[-2:]
     if x.shape[-1] != n or (a.ndim == 3 and a.shape[0] != x.shape[0]):
         raise ValueError(f"bgemv shape mismatch: {a.shape} @ {x.shape}")
-    bm, bn = min(block_m, tiling.round_up(m, 8)), min(block_n, tiling.round_up(n, 128))
-    a, _ = tiling.pad_dim_to(a, a.ndim - 2, bm)
-    a, _ = tiling.pad_dim_to(a, a.ndim - 1, bn)
-    x, _ = tiling.pad_dim_to(x, 1, bn)
-    out = _bgemv.bgemv(a, x, block_m=bm, block_n=bn, interpret=_interpret())
-    return out[:, :m]
+    _check_epilogue_shapes(a2, bias, residual, a.shape, (m,), (x.shape[0], m))
+    return _bgemv_call(a, x, a2, bias, residual, block_m=block_m,
+                       block_n=block_n, activation=activation,
+                       transpose_a=transpose_a)
 
 
 # --------------------------------------------------------------------------

@@ -276,18 +276,26 @@ def attention_layer(
     positions: jnp.ndarray,          # (T,) or (B, T) absolute positions of x tokens
     cache: Optional[dict] = None,    # {"k": (B, S, kv, hd), "v": ..., "pos": scalar | (B,)}
     prefix_len: Optional[int] = None,
+    residual: Optional[jnp.ndarray] = None,  # (B, T, d) fused into the wo flush
 ):
     """Returns (out, new_cache).  With a cache, x is the new-token block
     (decode: T == 1) appended at cache["pos"]; a (B,) pos vector appends each
-    slot at its own ragged position (continuous batching)."""
+    slot at its own ragged position (continuous batching).  `residual` (the
+    transformer block's skip connection) is added inside the output
+    projection's fused epilogue, so the returned `out` already includes it."""
     b, t, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
 
-    q = blas.matmul(x, params["wq"])
-    k = blas.matmul(x, params["wk"])
-    v = blas.matmul(x, params["wv"])
     if cfg.use_bias:
-        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+        # bias adds fused into the projection kernels' accumulator flush:
+        # 3 launches / 3 HBM writes instead of 6
+        q = blas.matmul_fused(x, params["wq"], bias=params["bq"])
+        k = blas.matmul_fused(x, params["wk"], bias=params["bk"])
+        v = blas.matmul_fused(x, params["wv"], bias=params["bv"])
+    else:
+        q = blas.matmul(x, params["wq"])
+        k = blas.matmul(x, params["wk"])
+        v = blas.matmul(x, params["wv"])
     q = constrain(q.reshape(b, t, h, hd), "dp", None, "tp", "tp?")
     k = constrain(k.reshape(b, t, kv, hd), "dp", None, "tp", "tp?")
     v = constrain(v.reshape(b, t, kv, hd), "dp", None, "tp", "tp?")
@@ -336,7 +344,11 @@ def attention_layer(
         causal=cfg.causal, prefix_len=prefix_len, q_offset=q_offset,
         full_scores=cfg.full_scores,
     )
-    out = blas.matmul(out.reshape(b, t, h * hd), params["wo"])
+    # residual (the block's skip connection) fuses into the output
+    # projection's flush: attn-out + residual is one HBM write
+    out = blas.matmul_fused(
+        out.reshape(b, t, h * hd), params["wo"], residual=residual
+    )
     return out, new_cache
 
 
@@ -364,26 +376,32 @@ def init_mlp(key, d: int, d_ff: int, kind: str = "swiglu", dtype=jnp.bfloat16, u
     return p
 
 
-def mlp(params: dict, x: jnp.ndarray, kind: str = "swiglu") -> jnp.ndarray:
-    if kind == "swiglu":
-        gate = jax.nn.silu(blas.matmul(x, params["w_gate"]).astype(jnp.float32))
-        up = blas.matmul(x, params["w_up"]).astype(jnp.float32)
-        mid = constrain((gate * up).astype(x.dtype), "dp", None, "tp")
-        return blas.matmul(mid, params["w_down"])
-    if kind == "geglu":
-        gate = jax.nn.gelu(blas.matmul(x, params["w_gate"]).astype(jnp.float32), approximate=True)
-        up = blas.matmul(x, params["w_up"]).astype(jnp.float32)
-        mid = constrain((gate * up).astype(x.dtype), "dp", None, "tp")
-        return blas.matmul(mid, params["w_down"])
-    # plain gelu MLP (whisper-style, with bias)
-    hdn = blas.matmul(x, params["w_up"])
-    if "b_up" in params:
-        hdn = hdn + params["b_up"]
-    hdn = jax.nn.gelu(hdn.astype(jnp.float32), approximate=True).astype(x.dtype)
-    out = blas.matmul(hdn, params["w_down"])
-    if "b_down" in params:
-        out = out + params["b_down"]
-    return out
+def mlp(params: dict, x: jnp.ndarray, kind: str = "swiglu",
+        residual: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """MLP forward with every epilogue fused into the GEMM flush.
+
+    SwiGLU/GEGLU is the dual-GEMM form: silu(x@Wg) * (x@Wu) is ONE
+    `matmul_fused` launch (two accumulators, gate multiply in the epilogue)
+    instead of two GEMMs + an elementwise kernel, and the down projection
+    carries the optional block residual — 2 HBM output writes per MLP where
+    the unfused chain made 4-5.  `residual` (the transformer block's skip
+    connection) is included in the returned value when given.
+    """
+    if kind in ("swiglu", "geglu"):
+        act = "silu" if kind == "swiglu" else "gelu"
+        mid = blas.matmul_fused(
+            x, params["w_gate"], w2=params["w_up"], activation=act
+        )
+        mid = constrain(mid, "dp", None, "tp")
+        return blas.matmul_fused(mid, params["w_down"], residual=residual)
+    # plain gelu MLP (whisper-style, with bias): bias+gelu fuse into the up
+    # projection, bias+residual into the down projection
+    hdn = blas.matmul_fused(
+        x, params["w_up"], bias=params.get("b_up"), activation="gelu"
+    )
+    return blas.matmul_fused(
+        hdn, params["w_down"], bias=params.get("b_down"), residual=residual
+    )
 
 
 # --------------------------------------------------------------------------

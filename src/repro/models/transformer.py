@@ -64,30 +64,34 @@ def init_dense_block(key, cfg: ModelConfig, dtype) -> dict:
 
 
 def dense_block(params, x, cfg: ModelConfig, *, positions, cache=None, prefix_len=None):
-    """Returns (x, new_cache, aux)."""
+    """Returns (x, new_cache, aux).
+
+    The skip connections ride the fused epilogues: the attention output
+    projection and the MLP down projection each add their residual inside
+    the kernel flush (layers.attention_layer/mlp `residual=`), so the block
+    writes each stream update to HBM once instead of GEMM-out + add.
+    """
     acfg = _attn_cfg(cfg)
     aux = jnp.zeros((), jnp.float32)
     if cfg.parallel_block:
         h = layers.apply_norm(params["ln1"], x, cfg.norm)
         a, new_cache = layers.attention_layer(
-            params["attn"], h, acfg, positions=positions, cache=cache, prefix_len=prefix_len
-        )
+            params["attn"], h, acfg, positions=positions, cache=cache,
+            prefix_len=prefix_len, residual=x,
+        )  # a = x + attn(h)
         if cfg.family == "moe":
             m, aux = moe.moe_layer(params["ffn"], h, cfg.moe, cfg.act)
-        else:
-            m = layers.mlp(params["ffn"], h, cfg.act)
-        return x + a + m, new_cache, aux
+            return a + m, new_cache, aux
+        return layers.mlp(params["ffn"], h, cfg.act, residual=a), new_cache, aux
     a, new_cache = layers.attention_layer(
         params["attn"], layers.apply_norm(params["ln1"], x, cfg.norm), acfg,
-        positions=positions, cache=cache, prefix_len=prefix_len,
-    )
-    x = x + a
-    h = layers.apply_norm(params["ln2"], x, cfg.norm)
+        positions=positions, cache=cache, prefix_len=prefix_len, residual=x,
+    )  # a = x + attn(...)
+    h = layers.apply_norm(params["ln2"], a, cfg.norm)
     if cfg.family == "moe":
         m, aux = moe.moe_layer(params["ffn"], h, cfg.moe, cfg.act)
-    else:
-        m = layers.mlp(params["ffn"], h, cfg.act)
-    return x + m, new_cache, aux
+        return a + m, new_cache, aux
+    return layers.mlp(params["ffn"], h, cfg.act, residual=a), new_cache, aux
 
 
 # --------------------------------------------------------------------------
@@ -329,10 +333,10 @@ def _shared_attn_block(params, x, cfg: ModelConfig, positions, occ: int, cache=N
         attn_params["wv"] = lora(attn_params["wv"], lo["va"], lo["vb"])
     a, new_cache = layers.attention_layer(
         attn_params, layers.apply_norm(sp["ln1"], x, cfg.norm), acfg,
-        positions=positions, cache=cache,
+        positions=positions, cache=cache, residual=x,
     )
-    x = x + a
-    x = x + layers.mlp(sp["ffn"], layers.apply_norm(sp["ln2"], x, cfg.norm), "gelu")
+    x = layers.mlp(sp["ffn"], layers.apply_norm(sp["ln2"], a, cfg.norm), "gelu",
+                   residual=a)
     return x, new_cache
 
 
@@ -355,9 +359,10 @@ def _audio_forward(params, x_dec, batch, cfg: ModelConfig, positions, cache=None
             h, _ = layers.attention_layer(
                 lp["attn"], layers.apply_norm(lp["ln1"], x, cfg.norm),
                 _attn_cfg(cfg, causal=False, use_rope=False), positions=enc_pos,
+                residual=x,
             )
-            x = x + h
-            x = x + layers.mlp(lp["ffn"], layers.apply_norm(lp["ln2"], x, cfg.norm), cfg.act)
+            x = layers.mlp(lp["ffn"], layers.apply_norm(lp["ln2"], h, cfg.norm),
+                           cfg.act, residual=h)
             return x, lc, jnp.zeros((), jnp.float32)
 
         enc, _, _ = _scan_blocks(params["enc_layers"], enc, enc_body, cfg, None)
@@ -378,23 +383,31 @@ def _audio_forward(params, x_dec, batch, cfg: ModelConfig, positions, cache=None
         self_cache = None if lc is None else {"k": lc["k"], "v": lc["v"], "pos": cache["pos"]}
         h, new_sc = layers.attention_layer(
             lp["attn"], layers.apply_norm(lp["ln1"], x, cfg.norm), acfg_self,
-            positions=positions, cache=self_cache,
+            positions=positions, cache=self_cache, residual=x,
         )
-        x = x + h
-        # cross attention: q from decoder, k/v from encoder output
+        x = h
+        # cross attention: q from decoder, k/v from encoder output (biases
+        # fused into the projection flush when present)
         hx = layers.apply_norm(lp["ln_x"], x, cfg.norm)
-        q = blas.matmul(hx, lp["xattn"]["wq"])
-        k = blas.matmul(enc, lp["xattn"]["wk"])
-        v = blas.matmul(enc, lp["xattn"]["wv"])
         if cfg.use_bias:
-            q, k, v = q + lp["xattn"]["bq"], k + lp["xattn"]["bk"], v + lp["xattn"]["bv"]
+            q = blas.matmul_fused(hx, lp["xattn"]["wq"], bias=lp["xattn"]["bq"])
+            k = blas.matmul_fused(enc, lp["xattn"]["wk"], bias=lp["xattn"]["bk"])
+            v = blas.matmul_fused(enc, lp["xattn"]["wv"], bias=lp["xattn"]["bv"])
+        else:
+            q = blas.matmul(hx, lp["xattn"]["wq"])
+            k = blas.matmul(enc, lp["xattn"]["wk"])
+            v = blas.matmul(enc, lp["xattn"]["wv"])
         bq_, tq_, _ = hx.shape
         q = q.reshape(bq_, tq_, cfg.n_heads, cfg.hd)
         k = layers.repeat_kv(k.reshape(bq_, enc.shape[1], cfg.n_kv, cfg.hd), cfg.n_heads // cfg.n_kv)
         v = layers.repeat_kv(v.reshape(bq_, enc.shape[1], cfg.n_kv, cfg.hd), cfg.n_heads // cfg.n_kv)
         ho = layers.attention_core(q, k, v, causal=False)
-        x = x + blas.matmul(ho.reshape(bq_, tq_, cfg.n_heads * cfg.hd), lp["xattn"]["wo"])
-        x = x + layers.mlp(lp["ffn"], layers.apply_norm(lp["ln2"], x, cfg.norm), cfg.act)
+        x = blas.matmul_fused(
+            ho.reshape(bq_, tq_, cfg.n_heads * cfg.hd), lp["xattn"]["wo"],
+            residual=x,
+        )
+        x = layers.mlp(lp["ffn"], layers.apply_norm(lp["ln2"], x, cfg.norm),
+                       cfg.act, residual=x)
         new_lc = None if lc is None else new_sc
         return x, new_lc, jnp.zeros((), jnp.float32)
 

@@ -9,8 +9,15 @@ examples.
 from __future__ import annotations
 
 import importlib.util
+import os
 import pathlib
 import sys
+
+# Hermetic autotuner: no kernel benchmarking at first touch and no writes to
+# the user-level disk cache during the suite.  Tests that exercise the
+# autotuner override these per-test via monkeypatch.setenv.
+os.environ["REPRO_AUTOTUNE"] = "0"
+os.environ["REPRO_AUTOTUNE_CACHE"] = "off"
 
 
 def _install_hypothesis_shim() -> None:

@@ -259,21 +259,42 @@ def test_level1_ref_backend_dispatches_to_oracles(monkeypatch):
 def test_bgemm_plans_blocks_for_operand_width(monkeypatch):
     """ops.bgemm's default block plan must see the real operand width —
     an f64 tile may not be budgeted as if it were bf16 (regression: the
-    plan call omitted dtype_bytes, so every dtype planned at 2 bytes)."""
+    plan call omitted dtype_bytes, so every dtype planned at 2 bytes).
+    Block defaults now route through the autotune cache front-end."""
     from repro.core import tiling
     from repro.kernels import ops
 
     seen = []
-    real = tiling.plan_batched_gemm
+    real = tiling.autotune_block_shape
 
     def spy(*a, **kw):
         seen.append(kw.get("dtype_bytes"))
         return real(*a, **kw)
 
-    monkeypatch.setattr(tiling, "plan_batched_gemm", spy)
+    monkeypatch.setattr(tiling, "autotune_block_shape", spy)
     with jax.experimental.enable_x64():
         ops.bgemm(jnp.ones((2, 9, 130), jnp.float64), jnp.ones((130, 5), jnp.float64))
     assert seen and seen[-1] == 8, seen
+
+
+def test_gemm_gemv_block_defaults_use_planner(monkeypatch):
+    """ops.gemm/ops.gemv defaults must come from the tiling planner at the
+    real operand width (regression: they hardcoded 256/512 blocks and
+    ignored the planner ops.bgemm already used)."""
+    from repro.core import tiling
+    from repro.kernels import ops
+
+    seen = []
+    real = tiling.autotune_block_shape
+
+    def spy(op, *a, **kw):
+        seen.append((op, kw.get("dtype_bytes")))
+        return real(op, *a, **kw)
+
+    monkeypatch.setattr(tiling, "autotune_block_shape", spy)
+    ops.gemm(jnp.ones((9, 130), jnp.float32), jnp.ones((130, 5), jnp.float32))
+    ops.gemv(jnp.ones((9, 130), jnp.float32), jnp.ones((130,), jnp.float32))
+    assert ("gemm", 4) in seen and ("gemv", 4) in seen, seen
 
 
 def test_shape_mismatch_raises_not_pads():
@@ -325,14 +346,16 @@ def test_matmul_3d_routes_through_bgemm_broadcast(monkeypatch):
 
 def test_matmul_decode_routes_through_bgemv(monkeypatch):
     """Decode-shaped (B, 1, d) matmuls must dispatch to ops.bgemv with
-    broadcast weights (the batched-decode serving path)."""
+    broadcast weights in their HBM layout + transpose_a=True (the
+    batched-decode serving path; regression: it materialized w.T on every
+    decode step)."""
     from repro.kernels import ops
 
     calls = []
     real_bgemv = ops.bgemv
 
     def spy(a, x, **kw):
-        calls.append((a.shape, x.shape))
+        calls.append((a.shape, x.shape, kw.get("transpose_a", False)))
         return real_bgemv(a, x, **kw)
 
     monkeypatch.setattr(ops, "bgemv", spy)
@@ -340,5 +363,6 @@ def test_matmul_decode_routes_through_bgemv(monkeypatch):
     w = _rand(1, (33, 11), F32)
     with blas.use_backend("pallas"):
         out = blas.matmul(x, w)
-    assert calls == [((11, 33), (4, 33))], calls  # 2-D a == broadcast-A
+    # 2-D a == broadcast-A, passed UNtransposed with transpose_a pushed down
+    assert calls == [((33, 11), (4, 33), True)], calls
     _cmp(out, _np(x) @ _np(w), F32)
