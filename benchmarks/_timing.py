@@ -1,0 +1,41 @@
+"""Shared noise-bounded pair timing for the CI-gated benchmarks.
+
+`min_fused_speedup` and `quant_speedup` gates both depend on this logic:
+keep it in ONE place so outlier handling can't silently diverge between the
+fused-epilogue and quantized benches.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+
+
+def time_pair(fn_a: Callable, fn_b: Callable, iters: int = 20,
+              pre_iter: Optional[Callable] = None):
+    """Interleaved min-of-iters wall clock for two contenders (us, us).
+
+    The contenders alternate inside ONE loop, so a noisy-neighbor burst on a
+    shared-CPU container inflates both sides of the same window instead of
+    poisoning one side's whole measurement (independent windows drift by
+    more than the effect sizes these benches measure).  `pre_iter` runs
+    before each timed call — e.g. an LLC flush so both sides stream their
+    operands from DRAM (the decode regime).
+    """
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    best_a = best_b = float("inf")
+    for _ in range(iters):
+        if pre_iter is not None:
+            pre_iter()
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        best_a = min(best_a, time.perf_counter() - t0)
+        if pre_iter is not None:
+            pre_iter()
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a * 1e6, best_b * 1e6

@@ -3,7 +3,14 @@
 Wall-clock on a 1-core CPU container is NOT the perf claim (that's the
 roofline analysis); these timings prove the public API is real and give the
 per-kernel VMEM working-set/arithmetic-intensity table that justifies the
-Pallas BlockSpecs (the AE4 analog)."""
+Pallas BlockSpecs (the AE4 analog).
+
+The bandwidth-bound rows (gemv / bgemv / ddot) report achieved GB/s against
+the HOST's measured streaming bandwidth — the paper's framing: XGEMV and
+DDOT run at a few percent of peak FLOPs because they are bandwidth-bound,
+so percent-of-bandwidth (not percent-of-FLOPs) is the number that says how
+well the implementation is doing.  GEMM rows keep GFLOP/s.
+"""
 
 import time
 
@@ -22,20 +29,56 @@ def _time(fn, *args, iters=10):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+_HOST_BW = None
+
+
+def host_stream_bw_gbs() -> float:
+    """Measured host streaming bandwidth (GB/s): a large f32 reduction —
+    the best sustained one-pass read rate this machine gives any kernel.
+    The denominator of the pct_bw column (the paper uses HBM peak; on this
+    CPU host the measured rate is the honest roofline)."""
+    global _HOST_BW
+    if _HOST_BW is None:
+        n = 48 * 1024 * 1024  # 192 MB: far past LLC
+        x = jnp.ones((n,), jnp.float32)
+        fn = jax.jit(jnp.sum)
+        us = _time(fn, x, iters=3)
+        _HOST_BW = n * 4 / us / 1e3
+    return _HOST_BW
+
+
 def rows():
     out = []
     key = jax.random.PRNGKey(0)
+    bw = host_stream_bw_gbs()
+    out.append(("host_stream_bw", 0.0, f"gbs={bw:.1f}"))
     for n in (256, 1024, 2048):
         a = jax.random.normal(key, (n, n), jnp.float32)
         x = jax.random.normal(key, (n,), jnp.float32)
+        xb = jax.random.normal(key, (8, n), jnp.float32)
         us = _time(jax.jit(blas.gemm), a, a)
         out.append((f"blas_gemm_n{n}", round(us, 1),
                     f"gflops={2 * n ** 3 / us / 1e3:.1f}"))
+        # bandwidth-bound rows: bytes moved / wall clock, as a fraction of
+        # the measured host streaming bandwidth (the 5-7%-of-peak framing,
+        # with the honest denominator)
         us = _time(jax.jit(blas.gemv), a, x)
+        bytes_moved = (n * n + 2 * n) * 4
+        gbs = bytes_moved / us / 1e3
         out.append((f"blas_gemv_n{n}", round(us, 1),
-                    f"gflops={2 * n * n / us / 1e3:.2f}"))
+                    f"gflops={2 * n * n / us / 1e3:.2f};gbs={gbs:.2f};"
+                    f"pct_bw={min(1.0, gbs / bw):.3f}"))
+        us = _time(jax.jit(blas.batched_gemv), a, xb)
+        bytes_moved = (n * n + 2 * 8 * n) * 4  # broadcast A read once
+        gbs = bytes_moved / us / 1e3
+        out.append((f"blas_bgemv_b8_n{n}", round(us, 1),
+                    f"gflops={2 * 8 * n * n / us / 1e3:.2f};gbs={gbs:.2f};"
+                    f"pct_bw={min(1.0, gbs / bw):.3f}"))
         us = _time(jax.jit(blas.dot), x, x)
-        out.append((f"blas_ddot_n{n}", round(us, 1), ""))
+        bytes_moved = 2 * n * 4
+        gbs = bytes_moved / us / 1e3
+        out.append((f"blas_ddot_n{n}", round(us, 1),
+                    f"gbs={gbs:.2f};pct_bw={min(1.0, gbs / bw):.3f}"))
 
     # Pallas block-shape table (structural, from the compiled-dry-run logic).
     # pct_roofline: the fraction of v5e peak the chosen block's arithmetic
@@ -53,5 +96,20 @@ def rows():
             f"flops_per_byte={b.arithmetic_intensity():.1f};"
             f"pct_roofline={pct:.3f};"
             f"grid={'x'.join(map(str, plan.grid))};pad_waste={plan.pad_waste_fraction():.2%}",
+        ))
+    # the packed-weight plan: same cells at int8 weight width — the feasible
+    # block set grows and the modeled flops/HBM-byte roughly doubles (the
+    # quantization win, stated structurally)
+    for m, n, k in ((4096, 4096, 4096),):
+        blk = tiling.rank_block_shapes(m, n, k, dtype_bytes=4, b_dtype_bytes=1)[0]
+        ai = (2 * blk.bm * blk.bn * blk.bk) / (
+            blk.bm * blk.bk * 4 + blk.bk * blk.bn * 1
+        )
+        pct = min(1.0, ai * HBM_BW / PEAK_FLOPS)
+        out.append((
+            f"gemm_blockspec_q8_{m}x{n}x{k}",
+            0.0,
+            f"block={blk.bm}x{blk.bn}x{blk.bk};flops_per_byte={ai:.1f};"
+            f"pct_roofline={pct:.3f}",
         ))
     return out

@@ -2,8 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).  With
 ``--json PATH`` it also writes a machine-readable report (schema below) so
-the perf trajectory — GFLOP/s, %-of-roofline, fused-vs-unfused speedup — is
-tracked across PRs; CI validates the schema on every push.
+the perf trajectory — GFLOP/s, %-of-roofline, fused-vs-unfused speedup,
+quantized-vs-f32 speedup — is tracked across PRs; CI validates the schema
+on every push.
+
+``--autotune`` sets REPRO_AUTOTUNE=1 before any benchmark module imports
+jax-heavy code, so every `ops.*` call tunes its block shape empirically on
+the live backend (top-K analytic candidates measured, winner cached): the
+fused variants are then measured at their TUNED blocks instead of the
+analytic guess.  The cache defaults to the user cache; point
+REPRO_AUTOTUNE_CACHE somewhere writable in CI.
 
 JSON schema (schema_version 1):
 
@@ -16,13 +24,17 @@ JSON schema (schema_version 1):
       "summary": {"max_gflops": float,          # best observed GFLOP/s
                   "pct_roofline": float,        # blockspec roofline fraction
                   "fused_speedup": float,       # best fused/unfused ratio
-                  "fused_structural_win": bool} # launches+HBM strictly fewer
+                  "min_fused_speedup": float,   # worst fused/unfused ratio
+                  "fused_structural_win": bool, # launches+HBM strictly fewer
+                  "quant_speedup": float,       # best quantized/f32 ratio
+                  "quant_weight_bytes_ratio": float}  # min modeled full/packed
     }
 """
 
 import argparse
 import importlib
 import json
+import os
 import sys
 import traceback
 
@@ -34,6 +46,7 @@ MODULES = [
     "benchmarks.bench_kernels",         # BLAS timings + BlockSpec table
     "benchmarks.bench_batched",         # fused batched BLAS vs per-item loops
     "benchmarks.bench_fused_epilogue",  # epilogue fusion vs unfused chains
+    "benchmarks.bench_quantized",       # packed int8 weight streaming vs f32
     "benchmarks.bench_serve",           # continuous vs batch-at-a-time serving
     "benchmarks.bench_roofline",        # deliverable (g) roofline table
 ]
@@ -57,6 +70,7 @@ def _parse_metrics(derived: str) -> dict:
 
 def _summarize(rows: list[dict]) -> dict:
     gflops, roofline, speedups, structural = [], [], [], []
+    q_speedups, q_ratios = [], []
     for row in rows:
         m = row["metrics"]
         for key in ("gflops", "gflops_fused"):
@@ -69,11 +83,21 @@ def _summarize(rows: list[dict]) -> dict:
         ):
             speedups.append(m["speedup"])
             structural.append(str(m.get("structural_win", "")) == "True")
+        if row["name"].startswith("quant_"):
+            if isinstance(m.get("speedup"), float):
+                q_speedups.append(m["speedup"])
+            if isinstance(m.get("weight_bytes_ratio"), float):
+                q_ratios.append(m["weight_bytes_ratio"])
+            if isinstance(m.get("weight_read_reduction"), float):
+                q_ratios.append(m["weight_read_reduction"])
     return {
         "max_gflops": max(gflops) if gflops else 0.0,
         "pct_roofline": max(roofline) if roofline else 0.0,
         "fused_speedup": max(speedups) if speedups else 0.0,
+        "min_fused_speedup": min(speedups) if speedups else 0.0,
         "fused_structural_win": bool(structural) and all(structural),
+        "quant_speedup": max(q_speedups) if q_speedups else 0.0,
+        "quant_weight_bytes_ratio": min(q_ratios) if q_ratios else 0.0,
     }
 
 
@@ -84,7 +108,15 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the machine-readable report (e.g. "
                          "BENCH_kernels.json)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="REPRO_AUTOTUNE=1: measure top-K analytic block-"
+                         "shape candidates on the live backend so fused "
+                         "variants run at tuned blocks")
     args = ap.parse_args()
+    if args.autotune:
+        # before the benchmark modules import and touch ops: the tuner reads
+        # the env at first kernel call
+        os.environ["REPRO_AUTOTUNE"] = "1"
     filters = args.only.split(",") if args.only else None
     print("name,us_per_call,derived")
     failed = []

@@ -17,12 +17,24 @@ for sched in continuous batch; do
     --scheduler "$sched"
 done
 
-# Fused-MLP smoke + perf-trajectory JSON: the kernel/fused-epilogue benches
-# run end-to-end and emit BENCH_kernels.json (GFLOP/s, %-of-roofline,
-# fused-vs-unfused speedup); the schema is validated so downstream tooling
-# can diff the numbers across PRs.
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py \
-  --only kernels,fused_epilogue --json BENCH_kernels.json
+# Quantized decode smoke: block-scaled int8 serving weights through the
+# continuous scheduler — the bandwidth-bound decode path runs packed end to
+# end (host int8 matvecs on CPU, in-kernel dequant under pallas on TPU).
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.launch.serve \
+  --variant smoke --requests 6 --batch 2 --prompt-len 8 --gen 4 \
+  --scheduler continuous --quantize int8
+
+# Fused-MLP + quantized-streaming smoke + perf-trajectory JSON: the
+# kernel/fused-epilogue/quantized benches run end-to-end and emit
+# BENCH_kernels.json (GFLOP/s, GB/s + %-of-measured-bandwidth for the
+# bandwidth-bound rows, fused and quantized speedups); the schema is
+# validated so downstream tooling can diff the numbers across PRs.
+# REPRO_AUTOTUNE_CACHE points into the workspace so --autotune runs (the
+# fused variants measured at tuned blocks) never touch $HOME in CI.
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+  REPRO_AUTOTUNE_CACHE="${REPRO_AUTOTUNE_CACHE:-.autotune-ci.json}" \
+  python benchmarks/run.py --autotune \
+  --only kernels,fused_epilogue,quantized --json BENCH_kernels.json
 python - <<'PY'
 import json
 
@@ -32,15 +44,25 @@ assert d["rows"], "no benchmark rows emitted"
 for row in d["rows"]:
     assert {"name", "us_per_call", "metrics"} <= set(row), row
 s = d["summary"]
-assert {"max_gflops", "pct_roofline", "fused_speedup",
-        "fused_structural_win"} <= set(s), s
+assert {"max_gflops", "pct_roofline", "fused_speedup", "min_fused_speedup",
+        "fused_structural_win", "quant_speedup",
+        "quant_weight_bytes_ratio"} <= set(s), s
 assert s["max_gflops"] > 0 and 0 < s["pct_roofline"] <= 1, s
-# the fused epilogue must win: >=1.2x wall clock, or — where the CPU
-# clock is too noisy to resolve it — strictly fewer kernel launches and
-# HBM round-trips on every fused row
-assert s["fused_speedup"] >= 1.2 or s["fused_structural_win"], s
-if s["fused_speedup"] < 1.2:
-    print(f"note: wall-clock speedup {s['fused_speedup']}x below 1.2 "
-          "(CPU timing noise); structural win carried the gate")
+# the fused epilogue must win structurally (fewer launches + HBM round
+# trips on every fused row) AND show no real wall-clock regression: the
+# interleaved pair timing bounds container noise, so >10% slower is a
+# genuine regression, not drift
+assert s["fused_structural_win"], s
+assert s["min_fused_speedup"] >= 0.9, s
+# the packed int8 path must win where it claims to: >=1.5x wall clock on
+# the bandwidth-bound GEMV/decode rows and >=2x modeled weight-byte
+# reduction on every quantized row (structural, backend-independent)
+assert s["quant_speedup"] >= 1.5, s
+assert s["quant_weight_bytes_ratio"] >= 2.0, s
+# bandwidth-bound rows must carry the GB/s roofline column
+names = {r["name"] for r in d["rows"]}
+for prefix in ("blas_gemv_", "blas_bgemv_", "blas_ddot_"):
+    row = next(r for r in d["rows"] if r["name"].startswith(prefix))
+    assert "pct_bw" in row["metrics"] and "gbs" in row["metrics"], row
 print("BENCH_kernels.json schema OK:", json.dumps(s))
 PY

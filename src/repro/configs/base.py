@@ -98,6 +98,10 @@ class ModelConfig:
     # decode KV cache dtype: "model" (= dtype) | "int8" (per-token-per-head
     # symmetric quantization; halves decode HBM traffic — hillclimb lever)
     kv_cache_dtype: str = "model"
+    # serving weight dtype: "model" (= dtype) | "int8" (block-scaled packed
+    # weights, core.quant: decode streams 1 byte/weight + ~3% scale overhead
+    # instead of 2-4 — the launch/serve --quantize path; roofline models it)
+    weight_dtype: str = "model"
 
     @property
     def hd(self) -> int:

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import epilogue as _epilogue
+from repro.core import quant as _quant
 from repro.core.epilogue import Epilogue
 
 _state = threading.local()
@@ -59,6 +60,33 @@ def _acc_dtype(x: jnp.ndarray) -> jnp.dtype:
     # max(f32, operand dtype): low-precision inputs accumulate in f32 (MXU
     # style); f64 operands keep f64 accumulation (the D-prefix routines).
     return jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16, jnp.int8) else x.dtype
+
+
+def _deq(w, dtype=jnp.float32):
+    """Dequantization fallback: exact W8A16 oracle semantics (xla/ref)."""
+    return w.dequantize(dtype) if _quant.is_quantized(w) else w
+
+
+def _quant_matvec_host(w, xb: jnp.ndarray, decode_shaped: bool = True) -> jnp.ndarray:
+    """Host (xla) packed matvec batch: y[b] = W^T x[b] -> (B, f) f32 for a
+    serving-layout QuantizedTensor (stored output-major).
+
+    DECODE-SHAPED calls (one token per member) run one contiguous int8 dot
+    per member (`quant.gemv_host` — the measured bandwidth win); everything
+    else falls back to exact dequantization, where the f32 GEMM's own batch
+    amortization already covers the traffic.  The switch keys on the call's
+    SHAPE only — never on the batch count — so the same token takes the
+    same numeric path at every batch size and greedy decode stays
+    bit-identical across scheduling configurations (the test_serve parity
+    contract).
+    """
+    batch = xb.shape[0]
+    if decode_shaped and w.transposed and _quant.host_fast_path_eligible(w):
+        if batch == 1:
+            return _quant.gemv_host(w, xb[0])[None]
+        return jnp.stack([_quant.gemv_host(w, xb[i]) for i in range(batch)])
+    acc = _acc_dtype(xb)
+    return jnp.matmul(xb.astype(acc), _deq(w).astype(acc))
 
 
 def _epi_spec(epilogue, gate, bias, residual) -> Epilogue:
@@ -138,7 +166,20 @@ def gemv(
     beta=0.0,
     trans: bool = False,
 ) -> jnp.ndarray:
-    """dgemv: y = alpha * op(A) x + beta * y (op = A or A^T)."""
+    """dgemv: y = alpha * op(A) x + beta * y (op = A or A^T).
+
+    A may be a block-scaled `QuantizedTensor` (non-transposed storage): the
+    pallas backend streams the packed int8 values with in-kernel
+    dequantization; xla runs the contiguous int8 host fast path when the
+    scale layout allows (per-row-block scales) and exact dequantization
+    otherwise; ref always uses the dequantization oracle.
+    """
+    quantized = _quant.is_quantized(A)
+    if quantized and (trans or A.transposed):
+        raise ValueError(
+            "quantized gemv streams A in its stored (m, n) layout; "
+            "quantize the transpose instead of passing trans=True"
+        )
     if trans:
         A = A.T
     backend = get_backend()
@@ -147,7 +188,13 @@ def gemv(
         out = ops.gemv(A, x)
     elif backend == "ref":
         from repro.kernels import ref
-        out = ref.gemv(A, x)
+        out = ref.gemv(_deq(A, x.dtype), x)
+    elif quantized:
+        if _quant.host_fast_path_eligible(A):
+            out = _quant.gemv_host(A, x).astype(x.dtype)
+        else:
+            acc = _acc_dtype(x)
+            out = jnp.dot(_deq(A).astype(acc), x.astype(acc)).astype(x.dtype)
     else:
         acc = _acc_dtype(A)
         out = jnp.dot(A, x, preferred_element_type=acc).astype(A.dtype)
@@ -185,6 +232,12 @@ def gemm(
     2-D operands only; for the model-layer entry point with leading batch
     dims use `matmul` / `matmul_fused` below.
     """
+    quantized = _quant.is_quantized(B)
+    if quantized and (transpose_a or transpose_b):
+        raise ValueError(
+            "quantized gemm streams B in its stored layout; fold the "
+            "transpose into QuantSpec(transpose=...) instead"
+        )
     if transpose_a:
         A = A.T
     if transpose_b:
@@ -197,21 +250,23 @@ def gemm(
     if backend == "pallas":
         from repro.kernels import ops
         out = ops.gemm(A, B, b2=B2, bias=bias, residual=residual,
-                       activation=epi.activation)
+                       activation=epi.activation,
+                       out_dtype=A.dtype if quantized else None)
     elif not epi.is_identity:
         # xla/ref fused fallback: accumulate in max(f32, dtype), apply the
         # identical epilogue semantic, cast once — same math, no kernel
+        # (quantized operands enter through the exact dequantization oracle)
         acc = _acc_dtype(A)
-        h = jnp.dot(A, B, preferred_element_type=acc).astype(acc)
-        h2 = (jnp.dot(A, B2, preferred_element_type=acc).astype(acc)
+        h = jnp.dot(A, _deq(B, A.dtype), preferred_element_type=acc).astype(acc)
+        h2 = (jnp.dot(A, _deq(B2, A.dtype), preferred_element_type=acc).astype(acc)
               if epi.gate else None)
         out = epi.apply(h, acc2=h2, bias=bias, residual=residual).astype(A.dtype)
     elif backend == "ref":
         from repro.kernels import ref
-        out = ref.gemm(A, B)
+        out = ref.gemm(A, _deq(B, A.dtype))
     else:
         acc = _acc_dtype(A)
-        out = jnp.dot(A, B, preferred_element_type=acc).astype(A.dtype)
+        out = jnp.dot(A, _deq(B, A.dtype), preferred_element_type=acc).astype(A.dtype)
     if alpha != 1.0:
         out = scal(alpha, out)
     if C is not None and beta != 0.0:
@@ -246,6 +301,12 @@ def batched_gemm(
     MoE-expert SwiGLU silu(A@B) * (A@B2) in one launch; `bias` is (n,),
     `residual` (batch, m, n).
     """
+    quantized = _quant.is_quantized(B)
+    if quantized and (transpose_a or transpose_b):
+        raise ValueError(
+            "quantized batched_gemm streams B in its stored layout; fold "
+            "the transpose into QuantSpec(transpose=...) instead"
+        )
     if transpose_a:
         A = jnp.swapaxes(A, -2, -1)
     if transpose_b:
@@ -258,21 +319,24 @@ def batched_gemm(
     if backend == "pallas":
         from repro.kernels import ops
         out = ops.bgemm(A, B, b2=B2, bias=bias, residual=residual,
-                        activation=epi.activation, out_dtype=out_dtype)
+                        activation=epi.activation,
+                        out_dtype=out_dtype or (A.dtype if quantized else None))
     elif not epi.is_identity:
+        # quantized operands enter through the exact dequantization oracle
         acc = _acc_dtype(A)
-        h = jnp.matmul(A, B, preferred_element_type=acc).astype(acc)
-        h2 = (jnp.matmul(A, B2, preferred_element_type=acc).astype(acc)
+        h = jnp.matmul(A, _deq(B, A.dtype), preferred_element_type=acc).astype(acc)
+        h2 = (jnp.matmul(A, _deq(B2, A.dtype), preferred_element_type=acc).astype(acc)
               if epi.gate else None)
         out = epi.apply(h, acc2=h2, bias=bias, residual=residual).astype(
             out_dtype or A.dtype
         )
     elif backend == "ref":
         from repro.kernels import ref
-        out = ref.bgemm(A, B, out_dtype=out_dtype)
+        out = ref.bgemm(A, _deq(B, A.dtype), out_dtype=out_dtype)
     else:
         acc = _acc_dtype(A)
-        out = jnp.matmul(A, B, preferred_element_type=acc).astype(out_dtype or A.dtype)
+        out = jnp.matmul(A, _deq(B, A.dtype),
+                         preferred_element_type=acc).astype(out_dtype or A.dtype)
     if alpha != 1.0:
         out = scal(alpha, out)
     if C is not None and beta != 0.0:
@@ -299,11 +363,43 @@ def batched_gemv(
     Under the pallas backend, trans=True is pushed into the kernel
     (`transpose_a`): the weight streams in its HBM layout instead of being
     materialized transposed on every call.
+
+    A may be a block-scaled `QuantizedTensor` (broadcast serving weight):
+    pallas streams the packed int8 values with in-kernel dequantization
+    (the stored layout must encode the op — quantize with
+    `QuantSpec(transpose=trans)`); xla uses the per-member contiguous int8
+    host fast path for small batches and exact dequantization otherwise;
+    ref always dequantizes.
     """
+    quantized = _quant.is_quantized(A)
     backend = get_backend()
     if backend == "pallas":
         from repro.kernels import ops
         out = ops.bgemv(A, x, transpose_a=trans)
+        if quantized:
+            out = out.astype(x.dtype)
+    elif quantized:
+        if trans != A.transposed:
+            raise ValueError(
+                "quantized batched_gemv streams the stored layout; quantize "
+                f"with QuantSpec(transpose={trans}) to request op=A^T={trans}"
+            )
+        if backend == "ref":
+            Ad = _deq(A, x.dtype)
+            if trans:
+                Ad = jnp.swapaxes(Ad, -2, -1)
+            from repro.kernels import ref
+            out = ref.bgemv(Ad, x)
+        elif trans:
+            out = _quant_matvec_host(A, x).astype(x.dtype)
+        elif _quant.host_fast_path_eligible(A) and A.ndim == 2:
+            out = jnp.stack(
+                [_quant.gemv_host(A, x[i]) for i in range(x.shape[0])]
+            ).astype(x.dtype)
+        else:
+            out = jnp.matmul(
+                _deq(A).astype(jnp.float32), x[..., None].astype(jnp.float32)
+            )[..., 0].astype(x.dtype)
     else:
         if trans:
             A = jnp.swapaxes(A, -2, -1)
@@ -330,14 +426,22 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     backend they route through the fused batched kernels with broadcast
     weights (bgemm, or bgemv for decode-shaped (..., 1, d) blocks) instead
     of reshape-flattening the batch away.
+
+    A `QuantizedTensor` w (layers.quantize_weights) runs the whole
+    projection packed: the pallas kernels stream int8 tiles with in-kernel
+    dequantization (decode-shaped inputs stay ONE broadcast-weight bgemv
+    launch, now at int8 bandwidth); the xla host backend uses per-member
+    contiguous int8 matvecs for small decode batches and exact
+    dequantization elsewhere.
     """
+    quantized = _quant.is_quantized(w)
     backend = get_backend()
     if backend == "pallas":
         from repro.kernels import ops
         lead = x.shape[:-1]
         if x.ndim <= 2:
             out = ops.gemm(x.reshape(-1, x.shape[-1]), w)
-            return out.reshape(*lead, w.shape[-1])
+            return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
         rows, d = x.shape[-2], x.shape[-1]
         xb = x.reshape(-1, rows, d)
         if rows == 1:
@@ -349,10 +453,24 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
             # The continuous-batching serve scheduler keeps the slot grid at a
             # fixed batch size (inactive slots compute and are masked on the
             # host), so this path — one fused launch — holds at any occupancy.
-            out = ops.bgemv(w, xb[:, 0, :], transpose_a=True).astype(x.dtype)
+            # Quantized weights are stored output-major (QuantSpec.transpose)
+            # so the same call streams packed int8 in HBM layout.
+            wq = w if not quantized or w.transposed else _deq(w, x.dtype)
+            out = ops.bgemv(wq, xb[:, 0, :], transpose_a=True).astype(x.dtype)
             return out.reshape(*lead, w.shape[-1])
         out = ops.bgemm(xb, w)
-        return out.reshape(*lead, w.shape[-1])
+        return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    if quantized:
+        lead = x.shape[:-1]
+        d, f = w.shape[-2:]
+        decode_shaped = x.ndim >= 3 and x.shape[-2] == 1
+        xb = x.reshape(-1, d)
+        if backend == "ref":
+            from repro.kernels import ref
+            out = ref.bgemv(jnp.swapaxes(_deq(w, x.dtype), -2, -1), xb)
+        else:
+            out = _quant_matvec_host(w, xb, decode_shaped).astype(x.dtype)
+        return out.reshape(*lead, f)
     acc = _acc_dtype(x)
     if acc == jnp.float32 and x.dtype == jnp.bfloat16:
         from repro.core import act_sharding
@@ -386,6 +504,7 @@ def matmul_fused(
     output cast, so all backends agree to dtype tolerance.
     """
     epi = _epi_spec(activation, w2, bias, residual)
+    quantized = _quant.is_quantized(w)
     lead = x.shape[:-1]
     f = w.shape[-1]
     res = None if residual is None else residual.reshape(*lead, f)
@@ -402,15 +521,37 @@ def matmul_fused(
         xb = x.reshape(-1, rows, d)
         if rows == 1:
             # decode-shaped: dual-GEMV with broadcast weights in HBM layout
-            # (transpose_a) — the whole decode-step SwiGLU is one launch
+            # (transpose_a) — the whole decode-step SwiGLU is one launch;
+            # quantized weights (stored output-major) keep it one launch at
+            # int8 bandwidth, both accumulators dequantizing on the fly
             rb = None if res is None else res.reshape(-1, f)
-            out = ops.bgemv(w, xb[:, 0, :], a2=w2, bias=bias, residual=rb,
+            wq, wq2 = w, w2
+            if quantized and not w.transposed:
+                wq, wq2 = _deq(w, x.dtype), _deq(w2, x.dtype)
+            out = ops.bgemv(wq, xb[:, 0, :], a2=wq2, bias=bias, residual=rb,
                             transpose_a=True,
                             activation=epi.activation).astype(x.dtype)
             return out.reshape(*lead, f)
         rb = None if res is None else res.reshape(-1, rows, f)
         out = ops.bgemm(xb, w, b2=w2, bias=bias, residual=rb,
                         activation=epi.activation, out_dtype=x.dtype)
+        return out.reshape(*lead, f)
+    if quantized:
+        # xla/ref: packed host matvecs (or the dequantization oracle) feed
+        # the identical epilogue semantic on the f32 accumulator
+        d = x.shape[-1]
+        decode_shaped = x.ndim >= 3 and x.shape[-2] == 1
+        xb = x.reshape(-1, d)
+        if backend == "ref":
+            from repro.kernels import ref
+            h = ref.bgemv(jnp.swapaxes(_deq(w), -2, -1), xb).astype(jnp.float32)
+            h2 = (ref.bgemv(jnp.swapaxes(_deq(w2), -2, -1), xb).astype(jnp.float32)
+                  if epi.gate else None)
+        else:
+            h = _quant_matvec_host(w, xb, decode_shaped)
+            h2 = _quant_matvec_host(w2, xb, decode_shaped) if epi.gate else None
+        r2 = None if res is None else res.reshape(xb.shape[0], f)
+        out = epi.apply(h, acc2=h2, bias=bias, residual=r2).astype(x.dtype)
         return out.reshape(*lead, f)
     acc = _acc_dtype(x)
     h = jnp.dot(x, w, preferred_element_type=acc).astype(acc)

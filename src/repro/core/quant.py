@@ -1,0 +1,328 @@
+"""Block-scaled int8 weight quantization: the bandwidth lever for L1/L2 BLAS.
+
+The paper's central measurement is that GEMV-class ops are bandwidth-bound —
+off-the-shelf hardware reaches 5-7% of peak on XGEMV while GEMM reaches
+15-57% — and our own BENCH_kernels.json reproduces it (gemm ~112 GFLOP/s,
+gemv ~6).  Every A element is touched once, so the only remaining lever is
+moving fewer bytes.  This module provides that lever: symmetric block-scaled
+int8 quantization of weight matrices, streamed packed through the kernels
+and dequantized on the fly against the existing f32 accumulator
+(W8A16-style), quartering (vs f32) or halving (vs bf16) the HBM weight
+traffic of the O(1)-reuse decode path.
+
+Layout co-design: a serving weight W (d, f) is consumed as y = W^T x on
+every decode step.  `QuantSpec.transpose=True` stores the packed values in
+(f, d) "output-major" order at quantization time, so the decode kernels
+stream the weight exactly as it sits in HBM (no transpose_a remapping and no
+per-step materialized W.T), and the host fast path can hit the contiguous
+int8 matvec.  Logical shape bookkeeping (`QuantizedTensor.shape`) stays in
+the original (d, f) orientation, so callers are layout-blind.
+
+Numerics: per-(block_m, block_n) f32 scale s = max|block| / 127, values
+round-to-nearest-even int8.  The elementwise error is bounded by s/2, which
+makes matvec error rigorously boundable per output row — see
+`matvec_error_bound`; tests assert the bound across dtypes and backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+#: longest contraction the host (XLA:CPU) int8 dot stays on its fast emitted
+#: loop for on this class of host; past it the int8 path degrades badly and
+#: the dequantization fallback is faster (measured, see bench_quantized)
+HOST_FAST_MAX_K = 2048
+
+
+def _fit_block(block: Optional[int], dim: int) -> int:
+    """Largest divisor of `dim` that is <= block (None -> dim itself).
+
+    Quantization blocks must tile the matrix exactly; shrinking to the
+    nearest divisor keeps `quantize` total on awkward (prime, padded) dims
+    at the cost of more scales, never at the cost of correctness.
+    """
+    if block is None or block >= dim:
+        return dim
+    b = max(1, block)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a block-scaled quantization.
+
+    block_m/block_n are the scale-block extents over the STORED layout's
+    rows/cols (None = the whole extent: one scale spanning that axis).
+    transpose=True stores values as logical.T — the decode/HBM layout (see
+    module docstring).
+    """
+
+    block_m: Optional[int] = 64
+    block_n: Optional[int] = None
+    dtype: str = "int8"
+    transpose: bool = False
+
+    def __post_init__(self):
+        if self.dtype != "int8":
+            raise ValueError(f"only int8 quantization is supported, got {self.dtype!r}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Packed int8 values + per-block f32 scales, a jit/scan-friendly pytree.
+
+    values: (..., M, N) int8 in STORED orientation (transposed=True means
+            stored = logical.T over the last two dims);
+    scales: (..., M/qm, N/qn) f32, one per (qm, qn) block of `values`;
+    block:  (qm, qn) static;
+    transposed: static layout marker.
+
+    Leading dims are free: a layer-stacked (L, f, d) weight or an
+    expert-stacked (E, d, f) MoE weight quantizes in one shot and slices
+    through `lax.scan`/vmap like any other pytree (aux data is static).
+    """
+
+    values: jnp.ndarray
+    scales: jnp.ndarray
+    block: Tuple[int, int]
+    transposed: bool = False
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.values, self.scales), (self.block, self.transposed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, scales = children
+        block, transposed = aux
+        return cls(values=values, scales=scales, block=block, transposed=transposed)
+
+    # -- shape bookkeeping -------------------------------------------------
+    @property
+    def stored_shape(self) -> tuple:
+        return self.values.shape
+
+    @property
+    def shape(self) -> tuple:
+        """LOGICAL shape (transpose undone), matching the array it replaces."""
+        s = self.values.shape
+        if self.transposed:
+            return s[:-2] + (s[-1], s[-2])
+        return s
+
+    @property
+    def ndim(self) -> int:
+        return self.values.ndim
+
+    @property
+    def packed_itemsize(self) -> int:
+        return self.values.dtype.itemsize
+
+    # -- numerics ----------------------------------------------------------
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        """Exact W8A16 semantics: values * per-block scale, in LOGICAL
+        orientation.  This is the oracle every backend's quantized output is
+        tested against."""
+        out = _expand_scales(self.scales, self.block, self.values.shape) * self.values.astype(
+            jnp.float32
+        )
+        if self.transposed:
+            out = jnp.swapaxes(out, -2, -1)
+        return out.astype(dtype)
+
+    def elementwise_bound(self) -> jnp.ndarray:
+        """Per-element |x - dequantize| upper bound (scale/2), full shape,
+        LOGICAL orientation."""
+        b = _expand_scales(self.scales, self.block, self.values.shape) * 0.5
+        return jnp.swapaxes(b, -2, -1) if self.transposed else b
+
+
+def _expand_scales(scales: jnp.ndarray, block: Tuple[int, int], shape: tuple) -> jnp.ndarray:
+    """(..., sm, sn) block scales -> (..., m, n) per-element scales."""
+    qm, qn = block
+    m, n = shape[-2:]
+    lead = shape[:-2]
+    s = jnp.broadcast_to(
+        scales[..., :, None, :, None],
+        lead + (m // qm, qm, n // qn, qn),
+    )
+    return s.reshape(shape)
+
+
+def quantize(x: jnp.ndarray, spec: QuantSpec = QuantSpec()) -> QuantizedTensor:
+    """Symmetric per-block int8 quantization over the last two dims.
+
+    Leading dims are treated as independent matrices (layer/expert stacks).
+    Zero blocks get scale 0 and quantize to exact zeros.
+    """
+    if x.ndim < 2:
+        raise ValueError(f"quantize needs a matrix, got shape {x.shape}")
+    if spec.transpose:
+        x = jnp.swapaxes(x, -2, -1)
+    m, n = x.shape[-2:]
+    qm, qn = _fit_block(spec.block_m, m), _fit_block(spec.block_n, n)
+    lead = x.shape[:-2]
+    xb = x.astype(jnp.float32).reshape(lead + (m // qm, qm, n // qn, qn))
+    amax = jnp.max(jnp.abs(xb), axis=(-3, -1))                      # (..., sm, sn)
+    scales = amax / INT8_MAX
+    inv = jnp.where(scales > 0, 1.0 / jnp.maximum(scales, 1e-30), 0.0)
+    q = jnp.round(xb * inv[..., :, None, :, None])
+    values = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8).reshape(x.shape)
+    return QuantizedTensor(values=values, scales=scales, block=(qm, qn),
+                           transposed=spec.transpose)
+
+
+def is_quantized(x) -> bool:
+    return isinstance(x, QuantizedTensor)
+
+
+# --------------------------------------------------------------------------
+# Error bounds (the documented accuracy contract)
+# --------------------------------------------------------------------------
+
+def matvec_error_bound(qt: QuantizedTensor, x: jnp.ndarray,
+                       activation_scales: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Rigorous per-output bound for |op(W_q) x - op(W) x|, W the logical 2-D
+    matrix behind `qt`, computing y = W^T x if qt.transposed is the serving
+    layout (i.e. always y over the STORED row axis: y = values' logical op
+    such that output dim = stored rows).
+
+    For the exact-dequant (W8A16) paths the bound per output row i is
+
+        err_i <= sum_b  s[i_blk, b] / 2 * sum_{j in b} |x_j|
+
+    (|w - w_hat| <= s/2 elementwise).  With `activation_scales` sx (one per
+    stored column block — the host W8A8 fast path), two more terms appear:
+    |w_hat| * sx/2 for the activation rounding against the dequantized
+    weight, and s*sx/4 for the cross term:
+
+        err_i <= sum_b [ s[i,b]/2 * L1(x_b) + sx_b/2 * L1(w_hat[i, b]) +
+                         s[i,b] * sx_b / 4 * n_b ]
+
+    Returns the (m,) bound over stored rows (= the GEMV output axis).
+    """
+    if qt.values.ndim != 2:
+        raise ValueError("matvec_error_bound covers 2-D quantized matrices")
+    m, n = qt.values.shape
+    qm, qn = qt.block
+    sm, sn = qt.scales.shape
+    l1 = jnp.sum(jnp.abs(x.astype(jnp.float32)).reshape(sn, qn), axis=1)   # (sn,)
+    bound_blk = 0.5 * qt.scales * l1[None, :]                              # (sm, sn)
+    if activation_scales is not None:
+        sx = activation_scales.astype(jnp.float32).reshape(sn)
+        # per-row L1 of the dequantized weight within each column block
+        w_row_l1 = (
+            jnp.sum(jnp.abs(qt.values.astype(jnp.float32)).reshape(m, sn, qn), axis=2)
+            * jnp.repeat(qt.scales, qm, axis=0)
+        )                                                                  # (m, sn)
+        extra = 0.5 * w_row_l1 * sx[None, :] + 0.25 * jnp.repeat(
+            qt.scales, qm, axis=0
+        ) * sx[None, :] * qn
+        return jnp.repeat(jnp.sum(bound_blk, axis=1), qm) + jnp.sum(extra, axis=1)
+    return jnp.repeat(jnp.sum(bound_blk, axis=1), qm)                      # (m,)
+
+
+# --------------------------------------------------------------------------
+# Traffic model (what packing buys, in HBM bytes — asserted structurally)
+# --------------------------------------------------------------------------
+
+def packed_weight_bytes(shape: tuple, block: Tuple[int, int] = (64, None)) -> int:
+    """HBM bytes of an int8 block-scaled weight: 1 byte/element + one f32
+    scale per (qm, qn) block."""
+    m, n = shape[-2:]
+    lead = 1
+    for d in shape[:-2]:
+        lead *= d
+    qm, qn = _fit_block(block[0], m), _fit_block(block[1], n)
+    return lead * (m * n + (m // qm) * (n // qn) * 4)
+
+
+def weight_traffic_ratio(shape: tuple, *, full_bytes_per_elem: int = 4,
+                         block: Tuple[int, int] = (64, None)) -> float:
+    """full-precision weight bytes / packed bytes — the structural claim the
+    quantized bench asserts (>= 2x vs bf16, ~3.97x vs f32 at default blocks)."""
+    m, n = shape[-2:]
+    lead = 1
+    for d in shape[:-2]:
+        lead *= d
+    full = lead * m * n * full_bytes_per_elem
+    return full / packed_weight_bytes(shape, block)
+
+
+# --------------------------------------------------------------------------
+# Host fast path: contiguous int8 matvec (the CPU analog of int8 streaming)
+# --------------------------------------------------------------------------
+
+def host_fast_path_eligible(qt: QuantizedTensor) -> bool:
+    """The XLA host backend has one genuinely fast int8 form: a contiguous
+    (m, n) @ (n,) int8 dot (row-major streaming, exactly the bandwidth-bound
+    access pattern) with a short-enough contraction (`HOST_FAST_MAX_K`).
+    Per-row-block scales (a single column block) let the whole contraction
+    run packed and apply scales on the (m,) result."""
+    return (qt.values.ndim == 2 and qt.scales.shape[-1] == 1
+            and qt.values.shape[-1] <= HOST_FAST_MAX_K)
+
+
+@jax.jit
+def quantize_activation(x: jnp.ndarray):
+    """Dynamic symmetric per-call activation quantization: (x8, sx)."""
+    xf = x.astype(jnp.float32)
+    sx = jnp.max(jnp.abs(xf)) / INT8_MAX
+    inv = jnp.where(sx > 0, 1.0 / jnp.maximum(sx, 1e-30), 0.0)
+    x8 = jnp.clip(jnp.round(xf * inv), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return x8, sx
+
+
+@functools.partial(jax.jit, static_argnames=("qm",))
+def _qdot(values, scales_col, x8, sx, *, qm: int):
+    p = jnp.dot(values, x8, preferred_element_type=jnp.int32)              # (m,)
+    return p.astype(jnp.float32) * (jnp.repeat(scales_col, qm) * sx)
+
+
+def gemv_host(qt: QuantizedTensor, x: jnp.ndarray) -> jnp.ndarray:
+    """y = values @ x over the stored layout via one int8 dot (W8A8-dynamic).
+
+    The activation is quantized per call with a single symmetric scale; the
+    int32 partials are rescaled by (weight row-block scale * activation
+    scale).  This reads 1 byte/weight instead of 4 — the measured >=1.5x
+    GEMV/decode win on bandwidth-bound shapes (bench_quantized.py).  The
+    extra activation-rounding error is covered by `matvec_error_bound(...,
+    activation_scales=)`; exact W8A16 semantics are available via
+    `dequantize()` and are what the Pallas kernels implement in-kernel.
+
+    Eager calls split into two XLA dispatches so x8 is a *parameter* of the
+    dot program: XLA:CPU otherwise fuses the whole quantization chain into
+    the dot's operand loop and recomputes it per output row, burning most of
+    the bandwidth win (measured ~2.5x overhead).  Traced calls (inside an
+    outer jit, e.g. a decode step) cannot split and accept the fused form.
+    """
+    if not host_fast_path_eligible(qt):
+        raise ValueError(
+            "gemv_host needs a 2-D tensor with per-row-block scales and "
+            f"contraction <= {HOST_FAST_MAX_K}"
+        )
+    qm = qt.block[0]
+    if isinstance(x, jax.core.Tracer) or isinstance(qt.values, jax.core.Tracer):
+        xf = x.astype(jnp.float32)
+        sx = jnp.max(jnp.abs(xf)) / INT8_MAX
+        inv = jnp.where(sx > 0, 1.0 / jnp.maximum(sx, 1e-30), 0.0)
+        x8 = jnp.clip(jnp.round(xf * inv), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+        p = jnp.dot(qt.values, x8, preferred_element_type=jnp.int32)
+        return p.astype(jnp.float32) * (jnp.repeat(qt.scales[:, 0], qm) * sx)
+    x8, sx = quantize_activation(x)
+    return _qdot(qt.values, qt.scales[:, 0], x8, sx, qm=qm)
+
+
+def activation_scale(x: jnp.ndarray) -> jnp.ndarray:
+    """The per-call activation scale `gemv_host` uses (for error bounds)."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32))) / INT8_MAX

@@ -116,6 +116,7 @@ def rank_block_shapes(
     top_k: Optional[int] = None,
     gate: bool = False,
     residual: bool = False,
+    b_dtype_bytes: Optional[int] = None,
 ) -> list[BlockShape]:
     """All VMEM-feasible MXU-aligned block shapes, best analytic guess first.
 
@@ -127,7 +128,14 @@ def rank_block_shapes(
     epilogue's extra tiles (second operand double buffer + f32 accumulator,
     residual double buffer) against the same budget, so a fused dual-GEMM
     cannot be planned past the VMEM the plain GEMM was budgeted for.
+
+    `b_dtype_bytes` plans a mixed-width op — f32/bf16 activations against a
+    packed int8 weight stream (core.quant): the B tiles are budgeted and
+    traffic-modelled at their true packed width, which makes bigger blocks
+    feasible and raises the achievable flops/HBM-byte exactly as the
+    quantization is supposed to.
     """
+    b_bytes = dtype_bytes if b_dtype_bytes is None else b_dtype_bytes
     ranked: list[tuple[float, int, int, int, BlockShape]] = []
     for bm in candidates:
         if bm > round_up(m, MXU_DIM):
@@ -139,12 +147,21 @@ def rank_block_shapes(
                 if bk > round_up(k, MXU_DIM):
                     continue
                 cand = BlockShape(bm, bn, bk)
-                used = cand.vmem_bytes(dtype_bytes) + epilogue_vmem_bytes(
-                    cand, dtype_bytes, gate=gate, residual=residual
-                )
+                if b_dtype_bytes is None:
+                    used = cand.vmem_bytes(dtype_bytes)
+                else:
+                    used = (2 * (bm * bk * dtype_bytes + bk * bn * b_bytes)
+                            + bm * bn * 4 + bm * bn * dtype_bytes)
+                # the gate operand is a second B stream (packed width when
+                # quantized); the residual tile is activation-width
+                used += epilogue_vmem_bytes(cand, b_bytes, gate=gate)
+                used += epilogue_vmem_bytes(cand, dtype_bytes,
+                                            residual=residual)
                 if used > vmem_budget:
                     continue
-                ai = (2 * bm * bn * bk) / ((bm * bk + bk * bn) * dtype_bytes)
+                ai = (2 * bm * bn * bk) / (
+                    bm * bk * dtype_bytes + bk * bn * b_bytes
+                )
                 ranked.append((-ai, -bk, bm, bn, cand))
     ranked.sort(key=lambda t: t[:4])
     out = [t[4] for t in ranked]
@@ -248,8 +265,14 @@ def clear_autotune_cache(disk: bool = False) -> None:
 
 def autotune_cache_key(op: str, m: int, n: int, k: int, dtype_bytes: int,
                        backend: str, *, gate: bool = False,
-                       residual: bool = False) -> str:
+                       residual: bool = False,
+                       quantized: bool = False) -> str:
     suffix = f":g{int(gate)}r{int(residual)}" if (gate or residual) else ""
+    if quantized:
+        # packed-weight plans budget B tiles at 1 byte: a winner measured
+        # quantized must never be served to the full-precision op (or vice
+        # versa), so the flag keys its own cache entries
+        suffix += ":q1"
     return f"{op}:m{m}:n{n}:k{k}:dt{dtype_bytes}:{backend}{suffix}"
 
 
@@ -266,6 +289,7 @@ def autotune_block_shape(
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     gate: bool = False,
     residual: bool = False,
+    quantized: bool = False,
 ) -> BlockShape:
     """Block shape for (op, m, n, k, dtype, backend), empirically tuned.
 
@@ -287,7 +311,7 @@ def autotune_block_shape(
     call with a different working set.
     """
     key = autotune_cache_key(op, m, n, k, dtype_bytes, backend,
-                             gate=gate, residual=residual)
+                             gate=gate, residual=residual, quantized=quantized)
     want_measured = autotune_enabled() and bench_fn is not None
     with _autotune_lock:
         _load_disk_cache()
@@ -297,6 +321,7 @@ def autotune_block_shape(
     shortlist = rank_block_shapes(
         m, n, k, dtype_bytes=dtype_bytes, vmem_budget=vmem_budget, top_k=top_k,
         gate=gate, residual=residual,
+        b_dtype_bytes=1 if quantized else None,
     )
     if want_measured:
         timed = [(bench_fn(blk), i) for i, blk in enumerate(shortlist)]
@@ -416,24 +441,34 @@ def plan_batched_gemm(
 class LayerTraffic:
     """Intermediate-tensor HBM traffic + launch count for one layer op chain.
 
-    Counts only the traffic fusion can remove: writes of intermediate
-    activations and the immediate read-back by the next op.  Operand/weight
-    streaming is identical fused and unfused, so it cancels out of the
-    comparison (bench_fused_epilogue reports both columns).
+    Counts the traffic fusion can remove — writes of intermediate
+    activations and the immediate read-back by the next op — plus, when the
+    caller asks (`weight_bytes_per_elem`), the weight stream itself: for the
+    O(1)-reuse decode path the weight read IS the op, and block-scaled int8
+    packing (core.quant) is the only lever that shrinks it.  With the
+    default (weight accounting off) operand/weight streaming is identical
+    fused and unfused and cancels out of the fusion comparison
+    (bench_fused_epilogue reports both columns).
     """
 
     kernel_launches: int
     hbm_writes: int   # bytes written (intermediates + final output)
     hbm_reads: int    # bytes of intermediates read straight back
+    weight_reads: int = 0  # bytes of weights streamed (0 = not modelled)
 
     @property
     def round_trips(self) -> int:
         return self.hbm_writes + self.hbm_reads
 
+    @property
+    def total_bytes(self) -> int:
+        return self.round_trips + self.weight_reads
+
 
 def mlp_traffic(
     m: int, d_model: int, d_ff: int, *, dtype_bytes: int = 2,
     fused: bool, kind: str = "swiglu",
+    weight_bytes_per_elem: float = 0.0,
 ) -> LayerTraffic:
     """HBM traffic for one MLP forward over m tokens.
 
@@ -443,21 +478,29 @@ def mlp_traffic(
     dual-GEMM epilogue computes mid inside the flush (one write), and the
     down projection is one more GEMM — 2 launches and 2 output writes total
     against 4+ launches and 4 writes/3 read-backs.
+
+    `weight_bytes_per_elem` > 0 also charges the weight stream (gate + up +
+    down = 3 * d_model * d_ff elements): pass the full dtype width for the
+    unquantized path and `quant.packed_weight_bytes(...)/elements` (~1.03
+    for int8 + per-block f32 scales) for the packed path — the structural
+    weight-byte reduction bench_quantized asserts.
     """
     mid = m * d_ff * dtype_bytes   # one (m, d_ff) intermediate
     out = m * d_model * dtype_bytes
+    n_mats = 3 if kind in ("swiglu", "geglu") else 2
+    w_reads = int(n_mats * d_model * d_ff * weight_bytes_per_elem)
     if kind in ("swiglu", "geglu"):
         if fused:
             # launch 1: dual-GEMM + gate epilogue -> mid; launch 2: down proj
             return LayerTraffic(kernel_launches=2, hbm_writes=mid + out,
-                                hbm_reads=mid)
+                                hbm_reads=mid, weight_reads=w_reads)
         # gate GEMM, up GEMM, elementwise silu*mul, down GEMM
         return LayerTraffic(kernel_launches=4, hbm_writes=3 * mid + out,
-                            hbm_reads=2 * mid + mid)
+                            hbm_reads=2 * mid + mid, weight_reads=w_reads)
     # two-matrix MLP (bias+gelu): fused = [up+bias+gelu] -> [down+bias]
     if fused:
         return LayerTraffic(kernel_launches=2, hbm_writes=mid + out,
-                            hbm_reads=mid)
+                            hbm_reads=mid, weight_reads=w_reads)
     # up GEMM, bias+gelu elementwise, down GEMM, bias elementwise
     return LayerTraffic(kernel_launches=4, hbm_writes=2 * mid + 2 * out,
-                        hbm_reads=mid + mid + out)
+                        hbm_reads=mid + mid + out, weight_reads=w_reads)

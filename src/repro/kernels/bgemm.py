@@ -42,12 +42,16 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.epilogue import Epilogue
 from repro.kernels import _compat
 from repro.kernels.gemm import epi_operands_match
+from repro.kernels.gemv import dequant_tile, fit_block_to_quant, scale_layout
 
 
-def _bgemm_kernel(a_ref, b_ref, *refs, nk: int, b_batched: bool, epi: Epilogue):
-    # refs: [b2] [bias] [residual] o acc [acc2]
+def _bgemm_kernel(a_ref, b_ref, *refs, nk: int, b_batched: bool, epi: Epilogue,
+                  q_block, b_layout: str):
+    # refs: [b_scales] [b2] [b2_scales] [bias] [residual] o acc [acc2]
     refs = list(refs)
+    b_s_ref = refs.pop(0) if q_block else None
     b2_ref = refs.pop(0) if epi.gate else None
+    b2_s_ref = refs.pop(0) if (epi.gate and q_block) else None
     bias_ref = refs.pop(0) if epi.bias else None
     res_ref = refs.pop(0) if epi.residual else None
     o_ref, acc_ref = refs[0], refs[1]
@@ -62,11 +66,26 @@ def _bgemm_kernel(a_ref, b_ref, *refs, nk: int, b_batched: bool, epi: Epilogue):
             acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
     a_tile = a_ref[0]
-    b_tile = b_ref[0] if b_batched else b_ref[...]
-    acc_ref[...] += jnp.dot(a_tile, b_tile, preferred_element_type=acc_ref.dtype)
+
+    def contract(ref, s_ref):
+        b_tile = ref[0] if b_batched else ref[...]
+        if q_block:
+            # packed int8 weight tile: dequantize in-kernel, in the STORED
+            # orientation, against the accumulator (1 B/element streamed)
+            s_tile = s_ref[0] if b_batched else s_ref[...]
+            b_tile = dequant_tile(b_tile, s_tile, *q_block, dtype=acc_ref.dtype)
+        if b_layout == "nk":
+            # output-major storage (QuantSpec.transpose): contract over k
+            # on both operands' trailing axes — no data transpose
+            return jax.lax.dot_general(
+                a_tile, b_tile, (((1,), (1,)), ((), ())),
+                preferred_element_type=acc_ref.dtype,
+            )
+        return jnp.dot(a_tile, b_tile, preferred_element_type=acc_ref.dtype)
+
+    acc_ref[...] += contract(b_ref, b_s_ref)
     if epi.gate:
-        b2_tile = b2_ref[0] if b_batched else b2_ref[...]
-        acc2_ref[...] += jnp.dot(a_tile, b2_tile, preferred_element_type=acc_ref.dtype)
+        acc2_ref[...] += contract(b2_ref, b2_s_ref)
 
     @pl.when(k == nk - 1)
     def _flush():
@@ -87,6 +106,10 @@ def bgemm(
     bias: jnp.ndarray = None,      # (1, n) broadcast across batch and rows
     residual: jnp.ndarray = None,  # (batch, m, n)
     epilogue: Epilogue = Epilogue(),
+    scales: jnp.ndarray = None,     # per-block f32 scales: b is packed int8
+    b2_scales: jnp.ndarray = None,  # same structure for the gate operand
+    q_block: tuple = None,          # (qm, qn) quant block over b's STORED axes
+    b_layout: str = "kn",
     block_m: int = 256,
     block_n: int = 256,
     block_k: int = 512,
@@ -95,14 +118,31 @@ def bgemm(
 ) -> jnp.ndarray:
     """C[b] = epilogue(A[b] @ B[b] [, A[b] @ B2[b]]) (2-D B/B2 broadcast).
     Dims must divide the blocks (ops.bgemm pads first — the paper's
-    DOT2/DOT3 fringe handling)."""
+    DOT2/DOT3 fringe handling).
+
+    With `scales`/`q_block`, B (and B2) are block-scaled packed int8 weights
+    (core.quant, batched or broadcast) streamed at 1 byte/element and
+    dequantized in-kernel; b_layout="nk" streams output-major storage
+    (QuantSpec.transpose) without materializing the transpose.
+    """
     batch, m, ka = a.shape
     b_batched = b.ndim == 3
-    kb, n = b.shape[-2:]
+    if b_layout == "nk":
+        n, kb = b.shape[-2:]
+    else:
+        kb, n = b.shape[-2:]
     assert ka == kb, (a.shape, b.shape)
     if b_batched:
         assert b.shape[0] == batch, (a.shape, b.shape)
     assert epi_operands_match(epilogue, b2, bias, residual)
+    assert (scales is None) == (q_block is None)
+    if q_block is not None:
+        assert (b2 is None) == (b2_scales is None)
+        qa, qb = q_block
+        sk, sn = (qb, qa) if b_layout == "nk" else (qa, qb)
+        assert ka % sk == 0 and n % sn == 0, ((ka, n), q_block, b_layout)
+        block_k = fit_block_to_quant(min(block_k, ka), sk)
+        block_n = fit_block_to_quant(min(block_n, n), sn)
     block_m, block_n, block_k = (min(block_m, m), min(block_n, n), min(block_k, ka))
     assert m % block_m == 0 and n % block_n == 0 and ka % block_k == 0, (
         (batch, m, n, ka),
@@ -112,14 +152,29 @@ def bgemm(
     # member, then advance the member — so a broadcast-B tile with nk == 1
     # keeps a constant index across the whole batch (fetched once per (i, j)).
     grid = (m // block_m, n // block_n, batch, ka // block_k)
+    if b_layout == "nk":
+        b_blk, b_idx = (block_n, block_k), lambda i, j, bi, k: (j, k)
+    else:
+        b_blk, b_idx = (block_k, block_n), lambda i, j, bi, k: (k, j)
+    q_eff = None
+    if q_block is not None:
+        s_blk, s_div, q_eff = scale_layout(b_blk, q_block)
+        s_idx = lambda i, j, bi, k: tuple(
+            c // d for c, d in zip(b_idx(i, j, bi, k), s_div)
+        )
     kernel = functools.partial(
-        _bgemm_kernel, nk=grid[3], b_batched=b_batched, epi=epilogue
+        _bgemm_kernel, nk=grid[3], b_batched=b_batched, epi=epilogue,
+        q_block=q_eff, b_layout=b_layout,
     )
     if b_batched:
-        b_spec = pl.BlockSpec((1, block_k, block_n), lambda i, j, bi, k: (bi, k, j))
+        b_spec = pl.BlockSpec((1,) + b_blk, lambda i, j, bi, k: (bi,) + b_idx(i, j, bi, k))
+        s_spec = (pl.BlockSpec((1,) + s_blk, lambda i, j, bi, k: (bi,) + s_idx(i, j, bi, k))
+                  if q_block else None)
     else:
         # index_map drops the batch coordinate: the broadcast-B serving case.
-        b_spec = pl.BlockSpec((block_k, block_n), lambda i, j, bi, k: (k, j))
+        b_spec = pl.BlockSpec(b_blk, b_idx)
+        s_spec = pl.BlockSpec(s_blk, s_idx) if q_block else None
+    out_dt = out_dtype or a.dtype
     # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMM proper)
     acc_dtype = jnp.promote_types(jnp.float32, a.dtype)
     operands = [a, b]
@@ -128,10 +183,16 @@ def bgemm(
         b_spec,
     ]
     scratch = [pltpu.VMEM((block_m, block_n), acc_dtype)]
+    if scales is not None:
+        operands.append(scales)
+        in_specs.append(s_spec)
     if epilogue.gate:
         assert b2.shape == b.shape, (b.shape, b2.shape)
         operands.append(b2)
         in_specs.append(b_spec)
+        if scales is not None:
+            operands.append(b2_scales)
+            in_specs.append(s_spec)
         scratch.append(pltpu.VMEM((block_m, block_n), acc_dtype))
     if epilogue.bias:
         assert bias.shape == (1, n), (bias.shape, n)
@@ -148,7 +209,7 @@ def bgemm(
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_m, block_n), lambda i, j, bi, k: (bi, i, j)),
-        out_shape=jax.ShapeDtypeStruct((batch, m, n), out_dtype or a.dtype),
+        out_shape=jax.ShapeDtypeStruct((batch, m, n), out_dt),
         scratch_shapes=scratch,
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),

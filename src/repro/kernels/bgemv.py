@@ -44,14 +44,18 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.epilogue import Epilogue
 from repro.kernels import _compat
 from repro.kernels.gemm import epi_operands_match
+from repro.kernels.gemv import dequant_tile, fit_block_to_quant, scale_layout
 
 
 def _bgemv_kernel(
-    a_ref, x_ref, *refs, nn: int, a_batched: bool, trans: bool, epi: Epilogue
+    a_ref, x_ref, *refs, nn: int, a_batched: bool, trans: bool, epi: Epilogue,
+    q_block
 ):
-    # refs: [a2] [bias] [residual] o acc [acc2]
+    # refs: [a_scales] [a2] [a2_scales] [bias] [residual] o acc [acc2]
     refs = list(refs)
+    a_s_ref = refs.pop(0) if q_block else None
     a2_ref = refs.pop(0) if epi.gate else None
+    a2_s_ref = refs.pop(0) if (epi.gate and q_block) else None
     bias_ref = refs.pop(0) if epi.bias else None
     res_ref = refs.pop(0) if epi.residual else None
     o_ref, acc_ref = refs[0], refs[1]
@@ -67,17 +71,22 @@ def _bgemv_kernel(
 
     x = x_ref[0].astype(acc_ref.dtype)  # (1, bn)
 
-    def contract(ref):
-        a = (ref[0] if a_batched else ref[...]).astype(acc_ref.dtype)
+    def contract(ref, s_ref):
+        if q_block:
+            # packed int8 weight tile (bm, bn): dequantize on the fly
+            # against the f32 accumulator — the weight streamed 1 B/elem
+            a = dequant_tile(ref[...], s_ref[...], *q_block, dtype=acc_ref.dtype)
+        else:
+            a = (ref[0] if a_batched else ref[...]).astype(acc_ref.dtype)
         if trans:
             # a is (bn, bm): contract over rows -> (1, bm)
             return jnp.sum(a * x[0][:, None], axis=0, keepdims=True)
         # a is (bm, bn): contract over cols -> (bm, 1)
         return jnp.sum(a * x, axis=1, keepdims=True)
 
-    acc_ref[...] += contract(a_ref)
+    acc_ref[...] += contract(a_ref, a_s_ref)
     if epi.gate:
-        acc2_ref[...] += contract(a2_ref)
+        acc2_ref[...] += contract(a2_ref, a2_s_ref)
 
     @pl.when(j == nn - 1)
     def _flush():
@@ -99,12 +108,24 @@ def bgemv(
     residual: jnp.ndarray = None,  # (batch, m, 1), or (batch, 1, m) when transpose_a
     epilogue: Epilogue = Epilogue(),
     transpose_a: bool = False,
+    scales: jnp.ndarray = None,     # (m/qm, n/qn) f32: a is packed int8
+    a2_scales: jnp.ndarray = None,  # same structure for the gate operand
+    q_block: tuple = None,          # (qm, qn) quant block
+    out_dtype=None,
     block_m: int = 512,
     block_n: int = 512,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """y[b] = epilogue(op(A[b]) @ x[b] [, op(A2[b]) @ x[b]]) -> (batch, m);
-    2-D A broadcasts, op = A^T under transpose_a."""
+    2-D A broadcasts, op = A^T under transpose_a.
+
+    With `scales`/`q_block`, A (and A2) are block-scaled packed int8 weights
+    (core.quant) streamed through VMEM at 1 byte/element and dequantized
+    in-kernel against the f32 accumulator — the serving decode case where
+    the broadcast weight dominates HBM traffic.  Quantized weights are
+    pre-laid-out output-major (QuantSpec.transpose), so transpose_a is not
+    combined with them.
+    """
     a_batched = a.ndim == 3
     if transpose_a:
         n, m = a.shape[-2:]
@@ -117,15 +138,29 @@ def bgemv(
     assert epi_operands_match(epilogue, a2, bias, residual)
     if a2 is not None:
         assert a2.shape == a.shape, (a.shape, a2.shape)
+    assert (scales is None) == (q_block is None)
+    if q_block is not None:
+        assert not transpose_a and not a_batched, (
+            "packed weights stream in their stored (output-major) layout; "
+            "quantize with QuantSpec(transpose=True) instead of transpose_a"
+        )
+        assert (a2 is None) == (a2_scales is None)
+        qm, qn = q_block
+        assert m % qm == 0 and n % qn == 0, ((m, n), q_block)
+        block_m = fit_block_to_quant(min(block_m, m), qm)
+        block_n = fit_block_to_quant(min(block_n, n), qn)
     block_m, block_n = min(block_m, m), min(block_n, n)
     assert m % block_m == 0 and n % block_n == 0, ((m, n), (block_m, block_n))
     # batch between the row block and the n sweep: a broadcast-A tile with
     # nn == 1 keeps a constant index across consecutive batch steps, so each
     # W row block is fetched once for the whole batch.
+    q_eff = None
+    if q_block is not None:
+        s_tile, s_div, q_eff = scale_layout((block_m, block_n), q_block)
     grid = (m // block_m, batch, n // block_n)
     kernel = functools.partial(
         _bgemv_kernel, nn=grid[2], a_batched=a_batched, trans=transpose_a,
-        epi=epilogue,
+        epi=epilogue, q_block=q_eff,
     )
     # tile/accumulator orientation follows the A layout: (bm, bn) tiles with
     # a (bm, 1) accumulator, or (bn, bm) tiles with a (1, bm) accumulator
@@ -147,14 +182,26 @@ def bgemv(
     a_spec = (
         pl.BlockSpec(ab_block, ab_idx) if a_batched else pl.BlockSpec(a_block, a_idx)
     )
+    out_dt = out_dtype or (x.dtype if scales is not None else a.dtype)
     # accumulate in max(f32, operand dtype): f64 stays f64 (DGEMV proper)
-    acc_dtype = jnp.promote_types(jnp.float32, a.dtype)
+    acc_dtype = jnp.promote_types(jnp.float32, out_dt)
+    s_spec = None
+    if scales is not None:
+        s_spec = pl.BlockSpec(
+            s_tile, lambda i, bi, j: (i // s_div[0], j // s_div[1])
+        )
     operands = [a, x[:, None, :]]
     in_specs = [a_spec, pl.BlockSpec((1, 1, block_n), lambda i, bi, j: (bi, 0, j))]
     scratch = [pltpu.VMEM(acc_shape, acc_dtype)]
+    if scales is not None:
+        operands.append(scales)
+        in_specs.append(s_spec)
     if epilogue.gate:
         operands.append(a2)
         in_specs.append(a_spec)
+        if scales is not None:
+            operands.append(a2_scales)
+            in_specs.append(s_spec)
         scratch.append(pltpu.VMEM(acc_shape, acc_dtype))
     if epilogue.bias:
         assert bias.shape == bias_shape, (bias.shape, bias_shape)
@@ -169,7 +216,7 @@ def bgemv(
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec(out_block, out_idx),
-        out_shape=jax.ShapeDtypeStruct(out_shape, a.dtype),
+        out_shape=jax.ShapeDtypeStruct(out_shape, out_dt),
         scratch_shapes=scratch,
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),

@@ -23,7 +23,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import _compat
 
 
-def _reduce_kernel(x_ref, y_ref, o_ref, acc_ref, *, nn: int, mode: str):
+def _reduce_kernel(x_ref, y_ref, o_ref, acc_ref, *, nn: int, n: int,
+                   block_n: int, mode: str):
     j = pl.program_id(0)
 
     @pl.when(j == 0)
@@ -32,7 +33,10 @@ def _reduce_kernel(x_ref, y_ref, o_ref, acc_ref, *, nn: int, mode: str):
 
     x = x_ref[...].astype(acc_ref.dtype)
     y = y_ref[...].astype(acc_ref.dtype)
-    acc_ref[...] += jnp.sum(x * y, keepdims=True)
+    # mask the ragged tail in-kernel (no caller padding): OOB strip reads
+    # are undefined and must not reach the accumulator
+    cols = j * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+    acc_ref[...] += jnp.sum(jnp.where(cols < n, x * y, 0.0), keepdims=True)
 
     @pl.when(j == nn - 1)
     def _flush():
@@ -45,9 +49,9 @@ def _reduce_kernel(x_ref, y_ref, o_ref, acc_ref, *, nn: int, mode: str):
 def _reduce(x, y, mode, block_n, interpret):
     (n,) = x.shape
     block_n = min(block_n, n)
-    assert n % block_n == 0, (n, block_n)
-    grid = (n // block_n,)
-    kernel = functools.partial(_reduce_kernel, nn=grid[0], mode=mode)
+    grid = (pl.cdiv(n, block_n),)
+    kernel = functools.partial(_reduce_kernel, nn=grid[0], n=n,
+                               block_n=block_n, mode=mode)
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -80,13 +84,14 @@ def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
 
 
 def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray, *, block_n: int = 2048, interpret: bool = False):
+    # ragged n needs no in-kernel mask: axpy is elementwise, the tail strip's
+    # undefined lanes never cross an accumulator, and Pallas clips the write
     (n,) = x.shape
     block_n = min(block_n, n)
-    assert n % block_n == 0, (n, block_n)
     alpha = jnp.asarray(alpha, jnp.promote_types(jnp.float32, x.dtype)).reshape(1, 1)
     out = pl.pallas_call(
         _axpy_kernel,
-        grid=(n // block_n,),
+        grid=(pl.cdiv(n, block_n),),
         in_specs=[
             pl.BlockSpec((1, 1), lambda j: (0, 0)),
             pl.BlockSpec((1, block_n), lambda j: (0, j)),

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import epilogue as _epilogue
+from repro.core import quant as _quant
 from repro.core import tiling
 from repro.kernels import attention as _attention
 from repro.kernels import bgemm as _bgemm
@@ -63,12 +64,16 @@ def _time_once(fn) -> float:
 
 
 def _resolve_blocks(op, m, n, k, dtype, block_m, block_n, block_k,
-                    bench_factory, *, gate=False, residual=False):
+                    bench_factory, *, gate=False, residual=False,
+                    quantized=False):
     """(block_m, block_n, block_k) for the call: explicit args win, else the
     autotuned/analytic plan.  Benchmarks only run on eager calls (concrete
     operands) with REPRO_AUTOTUNE=1; traced calls read the cache.  The
     epilogue flags charge the fused variant's extra VMEM against the plan
-    budget and key its cache entries separately from the unfused op."""
+    budget and key its cache entries separately from the unfused op.
+    `quantized` plans the weight operand at its true packed width (1 B) —
+    bigger feasible blocks, higher arithmetic intensity — and keys the cache
+    separately from the full-precision plan."""
     if block_m is not None and block_n is not None and block_k is not None:
         return block_m, block_n, block_k
     bench_fn = bench_factory if (tiling.autotune_enabled() and
@@ -76,9 +81,32 @@ def _resolve_blocks(op, m, n, k, dtype, block_m, block_n, block_k,
     blk = tiling.autotune_block_shape(
         op, m, n, k, dtype_bytes=dtype.itemsize,
         backend=jax.default_backend(), bench_fn=bench_fn,
-        gate=gate, residual=residual,
+        gate=gate, residual=residual, quantized=quantized,
     )
     return block_m or blk.bm, block_n or blk.bn, block_k or blk.bk
+
+
+def _align_block(block: int, q: int) -> int:
+    """Kernel-tile extent compatible with scale blocks of extent q: a
+    multiple of q when block >= q (tiles hold whole scale blocks), else a
+    divisor of q (tiles share one scale; `kernels.gemv.fit_block_to_quant`)
+    — the VMEM-budgeted plan is never inflated to a coarse scale block."""
+    return _gemv.fit_block_to_quant(block, q)
+
+
+def _pad_quant(qt, row_mult: int, col_mult: int):
+    """Pad packed values and their scales over the STORED last-2 axes so the
+    kernel's divisibility contract holds; zero scale blocks dequantize the
+    padding to exact zeros.  row_mult/col_mult come from `_align_block`: a
+    multiple of the quant block (scales pad in lockstep), or a divisor of
+    it (the dim is already a multiple of the tile — both pads are no-ops)."""
+    qm, qn = qt.block
+    v, s = qt.values, qt.scales
+    v, _ = tiling.pad_dim_to(v, v.ndim - 2, row_mult)
+    v, _ = tiling.pad_dim_to(v, v.ndim - 1, col_mult)
+    s, _ = tiling.pad_dim_to(s, s.ndim - 2, max(1, row_mult // qm))
+    s, _ = tiling.pad_dim_to(s, s.ndim - 1, max(1, col_mult // qn))
+    return v, s
 
 
 # --------------------------------------------------------------------------
@@ -92,18 +120,39 @@ def _resolve_blocks(op, m, n, k, dtype, block_m, block_n, block_k,
 def _gemm_call(a, b, b2, bias, residual, *, block_m, block_n, block_k,
                activation, out_dtype):
     m, k = a.shape
-    n = b.shape[1]
+    quantized = _quant.is_quantized(b)
+    n = b.shape[1]  # QuantizedTensor.shape is the LOGICAL (k, n)
     epi = _epi_spec(activation, b2, bias, residual)
     bm, bn, bk = (min(block_m, tiling.round_up(m, 8)),
                   min(block_n, tiling.round_up(n, 128)),
                   min(block_k, tiling.round_up(k, 128)))
+    q_kw = {}
+    if quantized:
+        # kernel tiles must hold whole scale blocks; padding keeps the
+        # packed values and their scales in lockstep (zero-scale padding)
+        layout = "nk" if b.transposed else "kn"
+        qa, qb = b.block
+        if layout == "nk":
+            bn, bk = _align_block(bn, qa), _align_block(bk, qb)
+            row_mult, col_mult = bn, bk
+        else:
+            bk, bn = _align_block(bk, qa), _align_block(bn, qb)
+            row_mult, col_mult = bk, bn
+        bv, bs = _pad_quant(b, row_mult, col_mult)
+        q_kw = {"scales": bs, "q_block": b.block, "b_layout": layout}
+        if b2 is not None:
+            b2v, b2s = _pad_quant(b2, row_mult, col_mult)
+            b2 = b2v
+            q_kw["b2_scales"] = b2s
+        b = bv
+    else:
+        b, _ = tiling.pad_dim_to(b, 0, bk)
+        b, _ = tiling.pad_dim_to(b, 1, bn)
+        if b2 is not None:
+            b2, _ = tiling.pad_dim_to(b2, 0, bk)
+            b2, _ = tiling.pad_dim_to(b2, 1, bn)
     a, _ = tiling.pad_dim_to(a, 0, bm)
     a, _ = tiling.pad_dim_to(a, 1, bk)
-    b, _ = tiling.pad_dim_to(b, 0, bk)
-    b, _ = tiling.pad_dim_to(b, 1, bn)
-    if b2 is not None:
-        b2, _ = tiling.pad_dim_to(b2, 0, bk)
-        b2, _ = tiling.pad_dim_to(b2, 1, bn)
     if bias is not None:
         bias, _ = tiling.pad_dim_to(bias.reshape(1, n), 1, bn)
     if residual is not None:
@@ -111,7 +160,7 @@ def _gemm_call(a, b, b2, bias, residual, *, block_m, block_n, block_k,
         residual, _ = tiling.pad_dim_to(residual, 1, bn)
     out = _gemm.gemm(a, b, b2=b2, bias=bias, residual=residual, epilogue=epi,
                      block_m=bm, block_n=bn, block_k=bk, out_dtype=out_dtype,
-                     interpret=_interpret())
+                     interpret=_interpret(), **q_kw)
     return out[:m, :n]
 
 
@@ -119,6 +168,11 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, *, b2=None, bias=None, residual=None,
          activation=None, block_m=None, block_n=None, block_k=None,
          out_dtype=None):
     """epilogue(a (m,k) @ b (k,n) [, a @ b2]) -> (m, n).
+
+    `b`/`b2` may be block-scaled `core.quant.QuantizedTensor` weights: the
+    kernel streams the packed int8 values (in their stored layout) and
+    dequantizes in-kernel; the tiling plan then runs at the true packed
+    operand width.
 
     Block defaults come from `tiling.autotune_block_shape("gemm", ...)` at
     the real operand width — the analytic AE4 plan, or the measured winner
@@ -128,6 +182,12 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, *, b2=None, bias=None, residual=None,
     n = b.shape[1]
     if b.shape[0] != k:
         raise ValueError(f"gemm shape mismatch: {a.shape} @ {b.shape}")
+    quantized = _quant.is_quantized(b)
+    if quantized and b2 is not None and (
+        not _quant.is_quantized(b2) or b2.block != b.block
+        or b2.transposed != b.transposed
+    ):
+        raise ValueError("dual-GEMM operands must share one quantization spec")
     _check_epilogue_shapes(b2, bias, residual, b.shape, (n,), (m, n))
     tracer = isinstance(a, jax.core.Tracer)
 
@@ -145,9 +205,11 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, *, b2=None, bias=None, residual=None,
             block_k=blk.bk, activation=activation, out_dtype=out_dtype))
 
     bm, bn, bk = _resolve_blocks("gemm", m, n, k, a.dtype, block_m, block_n,
-                                 block_k, None if tracer else bench,
+                                 block_k,
+                                 None if (tracer or quantized) else bench,
                                  gate=b2 is not None,
-                                 residual=residual is not None)
+                                 residual=residual is not None,
+                                 quantized=quantized)
     return _gemm_call(a, b, b2, bias, residual, block_m=bm, block_n=bn,
                       block_k=bk, activation=activation, out_dtype=out_dtype)
 
@@ -164,32 +226,43 @@ def _check_epilogue_shapes(gate_op, bias, residual, gate_shape, bias_shape,
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
 def _gemv_call(a, x, *, block_m, block_n):
+    # no padding: the kernel masks the ragged column fringe in-VMEM and
+    # Pallas clips the ragged output rows on the write
     m, n = a.shape
     bm, bn = min(block_m, tiling.round_up(m, 8)), min(block_n, tiling.round_up(n, 128))
-    a, _ = tiling.pad_dim_to(a, 0, bm)
-    a, _ = tiling.pad_dim_to(a, 1, bn)
-    x, _ = tiling.pad_dim_to(x, 0, bn)
-    out = _gemv.gemv(a, x, block_m=bm, block_n=bn, interpret=_interpret())
-    return out[:m]
+    if _quant.is_quantized(a):
+        if a.transposed:
+            raise ValueError("ops.gemv streams A in its stored layout; "
+                             "quantize with transpose=False")
+        return _gemv.gemv(a.values, x, scales=a.scales, q_block=a.block,
+                          out_dtype=x.dtype, block_m=bm, block_n=bn,
+                          interpret=_interpret())
+    return _gemv.gemv(a, x, block_m=bm, block_n=bn, interpret=_interpret())
 
 
 def gemv(a: jnp.ndarray, x: jnp.ndarray, *, block_m=None, block_n=None):
     """a (m, n) @ x (n,) -> (m,).  Block defaults route through
     `tiling.plan_gemm` (via the autotune cache) at the real operand width —
-    the row block is the plan's bm, the streamed n sweep its bk."""
+    the row block is the plan's bm, the streamed n sweep its bk.  A
+    `QuantizedTensor` a streams packed int8 with in-kernel dequantization."""
     m, n = a.shape
     if x.shape[0] != n:
         raise ValueError(f"gemv shape mismatch: {a.shape} @ {x.shape}")
-    tracer = isinstance(a, jax.core.Tracer)
+    quantized = _quant.is_quantized(a)
+    tracer = isinstance(x, jax.core.Tracer)
 
     def bench(blk):
         za, zx = jnp.zeros((m, n), a.dtype), jnp.zeros((n,), x.dtype)
         return _time_once(lambda: _gemv_call(za, zx, block_m=blk.bm,
                                              block_n=blk.bk))
 
-    # gemv is plan_gemm's (m, 1, n) cell: bm rows x bk streamed columns
-    bm, _, bn = _resolve_blocks("gemv", m, 1, n, a.dtype, block_m, 128,
-                                block_n, None if tracer else bench)
+    # gemv is plan_gemm's (m, 1, n) cell: bm rows x bk streamed columns;
+    # quantized plans at the packed 1-byte width (the A stream IS the weight)
+    bm, _, bn = _resolve_blocks(
+        "gemv", m, 1, n,
+        jnp.dtype(jnp.int8) if quantized else a.dtype, block_m, 128,
+        block_n, None if (tracer or quantized) else bench,
+        quantized=quantized)
     return _gemv_call(a, x, block_m=bm, block_n=bn)
 
 
@@ -204,18 +277,37 @@ def gemv(a: jnp.ndarray, x: jnp.ndarray, *, block_m=None, block_n=None):
 def _bgemm_call(a, b, b2, bias, residual, *, block_m, block_n, block_k,
                 activation, out_dtype):
     batch, m, k = a.shape
-    n = b.shape[-1]
+    quantized = _quant.is_quantized(b)
+    n = b.shape[-1]  # QuantizedTensor.shape is the LOGICAL (..., k, n)
     epi = _epi_spec(activation, b2, bias, residual)
     bm, bn, bk = (min(block_m, tiling.round_up(m, 8)),
                   min(block_n, tiling.round_up(n, 128)),
                   min(block_k, tiling.round_up(k, 128)))
+    q_kw = {}
+    if quantized:
+        layout = "nk" if b.transposed else "kn"
+        qa, qb = b.block
+        if layout == "nk":
+            bn, bk = _align_block(bn, qa), _align_block(bk, qb)
+            row_mult, col_mult = bn, bk
+        else:
+            bk, bn = _align_block(bk, qa), _align_block(bn, qb)
+            row_mult, col_mult = bk, bn
+        bv, bs = _pad_quant(b, row_mult, col_mult)
+        q_kw = {"scales": bs, "q_block": b.block, "b_layout": layout}
+        if b2 is not None:
+            b2v, b2s = _pad_quant(b2, row_mult, col_mult)
+            b2 = b2v
+            q_kw["b2_scales"] = b2s
+        b = bv
+    else:
+        b, _ = tiling.pad_dim_to(b, b.ndim - 2, bk)
+        b, _ = tiling.pad_dim_to(b, b.ndim - 1, bn)
+        if b2 is not None:
+            b2, _ = tiling.pad_dim_to(b2, b2.ndim - 2, bk)
+            b2, _ = tiling.pad_dim_to(b2, b2.ndim - 1, bn)
     a, _ = tiling.pad_dim_to(a, 1, bm)
     a, _ = tiling.pad_dim_to(a, 2, bk)
-    b, _ = tiling.pad_dim_to(b, b.ndim - 2, bk)
-    b, _ = tiling.pad_dim_to(b, b.ndim - 1, bn)
-    if b2 is not None:
-        b2, _ = tiling.pad_dim_to(b2, b2.ndim - 2, bk)
-        b2, _ = tiling.pad_dim_to(b2, b2.ndim - 1, bn)
     if bias is not None:
         bias, _ = tiling.pad_dim_to(bias.reshape(1, n), 1, bn)
     if residual is not None:
@@ -223,7 +315,7 @@ def _bgemm_call(a, b, b2, bias, residual, *, block_m, block_n, block_k,
         residual, _ = tiling.pad_dim_to(residual, 2, bn)
     out = _bgemm.bgemm(a, b, b2=b2, bias=bias, residual=residual, epilogue=epi,
                        block_m=bm, block_n=bn, block_k=bk,
-                       out_dtype=out_dtype, interpret=_interpret())
+                       out_dtype=out_dtype, interpret=_interpret(), **q_kw)
     return out[:, :m, :n]
 
 
@@ -242,6 +334,12 @@ def bgemm(a: jnp.ndarray, b: jnp.ndarray, *, b2=None, bias=None, residual=None,
     # validate BEFORE padding: pad_dim_to would silently absorb a k mismatch
     if b.shape[-2] != k or (b.ndim == 3 and b.shape[0] != batch):
         raise ValueError(f"bgemm shape mismatch: {a.shape} @ {b.shape}")
+    quantized = _quant.is_quantized(b)
+    if quantized and b2 is not None and (
+        not _quant.is_quantized(b2) or b2.block != b.block
+        or b2.transposed != b.transposed
+    ):
+        raise ValueError("dual-GEMM operands must share one quantization spec")
     _check_epilogue_shapes(b2, bias, residual, b.shape, (n,), (batch, m, n))
     tracer = isinstance(a, jax.core.Tracer)
 
@@ -261,9 +359,11 @@ def bgemm(a: jnp.ndarray, b: jnp.ndarray, *, b2=None, bias=None, residual=None,
     # bf16 block's VMEM footprint (key differs from "gemm": the batched grid
     # amortizes broadcast-B fetches, so measured winners may differ too)
     bm, bn, bk = _resolve_blocks("bgemm", m, n, k, a.dtype, block_m, block_n,
-                                 block_k, None if tracer else bench,
+                                 block_k,
+                                 None if (tracer or quantized) else bench,
                                  gate=b2 is not None,
-                                 residual=residual is not None)
+                                 residual=residual is not None,
+                                 quantized=quantized)
     return _bgemm_call(a, b, b2, bias, residual, block_m=bm, block_n=bn,
                        block_k=bk, activation=activation, out_dtype=out_dtype)
 
@@ -273,7 +373,19 @@ def bgemm(a: jnp.ndarray, b: jnp.ndarray, *, b2=None, bias=None, residual=None,
 )
 def _bgemv_call(a, x, a2, bias, residual, *, block_m, block_n, activation,
                 transpose_a):
-    if transpose_a:
+    quantized = _quant.is_quantized(a)
+    if quantized:
+        # the packed weight streams in its STORED layout: logical transposes
+        # were folded in at quantization time (QuantSpec.transpose), so the
+        # caller's transpose_a must cancel against the storage orientation
+        if transpose_a != a.transposed:
+            raise ValueError(
+                "quantized bgemv streams the stored layout; quantize with "
+                f"transpose={transpose_a} to request op=A^T={transpose_a}"
+            )
+        transpose_a = False
+        m, n = a.values.shape[-2:]
+    elif transpose_a:
         n, m = a.shape[-2:]
     else:
         m, n = a.shape[-2:]
@@ -283,12 +395,24 @@ def _bgemv_call(a, x, a2, bias, residual, *, block_m, block_n, activation,
     # contraction n on sublanes, so the alignment constraints swap too
     bm = min(block_m, tiling.round_up(m, 128 if transpose_a else 8))
     bn = min(block_n, tiling.round_up(n, 8 if transpose_a else 128))
-    m_ax, n_ax = (a.ndim - 1, a.ndim - 2) if transpose_a else (a.ndim - 2, a.ndim - 1)
-    a, _ = tiling.pad_dim_to(a, m_ax, bm)
-    a, _ = tiling.pad_dim_to(a, n_ax, bn)
-    if a2 is not None:
-        a2, _ = tiling.pad_dim_to(a2, m_ax, bm)
-        a2, _ = tiling.pad_dim_to(a2, n_ax, bn)
+    q_kw = {}
+    if quantized:
+        qm, qn = a.block
+        bm, bn = _align_block(bm, qm), _align_block(bn, qn)
+        av, a_s = _pad_quant(a, bm, bn)
+        q_kw = {"scales": a_s, "q_block": a.block}
+        if a2 is not None:
+            a2v, a2_s = _pad_quant(a2, bm, bn)
+            a2 = a2v
+            q_kw["a2_scales"] = a2_s
+        a = av
+    else:
+        m_ax, n_ax = (a.ndim - 1, a.ndim - 2) if transpose_a else (a.ndim - 2, a.ndim - 1)
+        a, _ = tiling.pad_dim_to(a, m_ax, bm)
+        a, _ = tiling.pad_dim_to(a, n_ax, bn)
+        if a2 is not None:
+            a2, _ = tiling.pad_dim_to(a2, m_ax, bm)
+            a2, _ = tiling.pad_dim_to(a2, n_ax, bn)
     x, _ = tiling.pad_dim_to(x, 1, bn)
     if bias is not None:
         bias = bias.reshape((1, m) if transpose_a else (m, 1))
@@ -300,7 +424,7 @@ def _bgemv_call(a, x, a2, bias, residual, *, block_m, block_n, activation,
         residual, _ = tiling.pad_dim_to(residual, 2 if transpose_a else 1, bm)
     out = _bgemv.bgemv(a, x, a2=a2, bias=bias, residual=residual, epilogue=epi,
                        transpose_a=transpose_a, block_m=bm, block_n=bn,
-                       interpret=_interpret())
+                       interpret=_interpret(), **q_kw)
     return out[:, :m]
 
 
@@ -312,8 +436,20 @@ def bgemv(a: jnp.ndarray, x: jnp.ndarray, *, a2=None, bias=None, residual=None,
     streams the weight in its HBM layout (op = A^T) instead of requiring a
     materialized transpose; 2-D a broadcasts across the batch (the serving
     decode case).  bias is (m,), residual (batch, m).
+
+    A `QuantizedTensor` a (and a2) is the packed serving weight: int8 tiles
+    stream at 1 byte/element and dequantize in-kernel against the f32
+    accumulator.  Its stored layout already encodes the op (transpose folded
+    in at quantization time), so transpose_a must match `a.transposed`.
     """
-    if transpose_a:
+    if _quant.is_quantized(a):
+        # logical orientation bookkeeping: .shape undoes the stored transpose
+        m, n = (a.shape[-2:][::-1]) if transpose_a else a.shape[-2:]
+        if a2 is not None and (not _quant.is_quantized(a2)
+                               or a2.block != a.block
+                               or a2.transposed != a.transposed):
+            raise ValueError("dual-GEMV operands must share one quantization spec")
+    elif transpose_a:
         n, m = a.shape[-2:]
     else:
         m, n = a.shape[-2:]

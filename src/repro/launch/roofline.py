@@ -38,6 +38,13 @@ HBM_PER_CHIP = 16 * 1024 ** 3
 #: int8+scales gradient compression shrinks DP-collective payloads ~3.97x
 COMPRESSION_FACTOR = 4 * 1024 / (1024 + 4)
 
+#: block-scaled int8 serving weights (core.quant): 1 byte/element + the f32
+#: block scales.  The default serving spec (64-row blocks spanning the row)
+#: amortizes each scale over 64*n elements, so the true overhead is
+#: negligible; 1 + 4/64 is a conservative upper bound (one scale per 64
+#: elements) that also covers fine-grained 2-D block specs
+WEIGHT_INT8_BYTES = 1.0 + 4.0 / 64.0
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
@@ -135,12 +142,27 @@ def analytic_hbm_bytes(cfg, cell, chips: int, microbatches: int = 1,
     + bwd), activation I/O per layer (q/k/v/o, MLP hidden, residual — flash
     scores excluded), gradient accumulation, optimizer state update, KV
     cache traffic.  Raw HLO bytes are reported alongside for comparison.
+
+    Inference weight reads honor `cfg.weight_dtype`: block-scaled int8
+    serving weights (the --quantize path) stream ~1.06 bytes/param instead
+    of 2 — on the decode cells, where the weight read IS the dominant term,
+    this is the single biggest modeled byte reduction available.  Only the
+    projection weights pack (layers.quantize_weights leaves the embedding/
+    unembedding tables, norms and biases full width), so the packed byte
+    width applies to param_count MINUS the embedding share.  Training
+    always reads full-width weights (the quantized path is serve-only).
     """
     d, ff, hd = cfg.d_model, cfg.d_ff, cfg.hd
     h, kv, L = cfg.n_heads, cfg.n_kv, cfg.n_layers
     dt = 2.0  # bf16
     p_total = cfg.param_count() * dt
     p_local = p_total / chips
+    w_b = (WEIGHT_INT8_BYTES
+           if getattr(cfg, "weight_dtype", "model") == "int8" else dt)
+    # embedding (+ untied head) stays full width on the quantized path
+    p_embed = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    p_packed = max(0, cfg.param_count() - p_embed)
+    p_local_serve = (p_packed * w_b + p_embed * dt) / chips
 
     # per-token activation I/O units (dims written+read once, per layer)
     if cfg.family in ("dense", "vlm", "moe"):
@@ -176,7 +198,7 @@ def analytic_hbm_bytes(cfg, cell, chips: int, microbatches: int = 1,
         tokens = cell.global_batch * cell.seq_len
         act = layers * tokens * unit * dt / chips
         cache_w = L * tokens * 2 * kv * hd * dt / chips
-        return act + microbatches * p_local + cache_w
+        return act + microbatches * p_local_serve + cache_w
     # decode: one token/seq; weights + full KV cache read dominate
     kv_b = 1.03 if getattr(cfg, "kv_cache_dtype", "model") == "int8" else dt
     cache = L * cell.global_batch * cell.seq_len * 2 * kv * hd * kv_b / chips
@@ -192,7 +214,7 @@ def analytic_hbm_bytes(cfg, cell, chips: int, microbatches: int = 1,
             + n_occ * cell.global_batch * cell.seq_len * 2 * kv * hd * dt
         ) / chips
     act = layers * cell.global_batch * unit * dt / chips
-    return p_local + cache + act
+    return p_local_serve + cache + act
 
 
 @dataclasses.dataclass

@@ -50,8 +50,15 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
           verbose: bool = True, backend: str = "xla",
           scheduler: str = "continuous",
           gen_lens: Optional[Sequence[int]] = None,
-          prompts: Optional[Sequence[np.ndarray]] = None):
+          prompts: Optional[Sequence[np.ndarray]] = None,
+          quantize: str = "none"):
     """Serve `requests` synthetic prompts through greedy decode.
+
+    quantize="int8" packs every projection weight with block-scaled int8
+    (layers.quantize_weights) before serving: the bandwidth-bound decode
+    path — one broadcast-weight bgemv over every weight matrix per token —
+    streams 1 byte/weight instead of 2-4, with in-kernel dequantization
+    under the pallas backend and packed host matvecs under xla.
 
     gen_lens: optional per-request generation budgets (defaults to `gen` for
     every request) — the mixed-length distribution is where continuous
@@ -93,6 +100,8 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
         gen_lens = [gen] * n
     if len(gen_lens) != n:
         raise ValueError(f"{len(gen_lens)} gen_lens for {n} requests")
+    if quantize not in ("none", "int8"):
+        raise ValueError(f"quantize must be 'none' or 'int8', got {quantize!r}")
     with blas.use_backend(backend):
         if scheduler == "continuous":
             if cfg.family not in tf.SLOT_CACHE_FAMILIES:
@@ -101,9 +110,11 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
                     f"families (per-slot KV caches); {cfg.family!r} needs "
                     f"--scheduler batch"
                 )
-            stats = _serve_continuous(cfg, prompts, list(gen_lens), batch, seed, eos)
+            stats = _serve_continuous(cfg, prompts, list(gen_lens), batch, seed,
+                                      eos, quantize)
         elif scheduler == "batch":
-            stats = _serve_batch(cfg, prompts, list(gen_lens), batch, seed, eos)
+            stats = _serve_batch(cfg, prompts, list(gen_lens), batch, seed, eos,
+                                 quantize)
         else:
             raise ValueError(f"scheduler must be 'continuous' or 'batch', got {scheduler!r}")
     if verbose:
@@ -178,14 +189,21 @@ def _admit_step(cache, mini, slots, tok, tok0):
     return cache, tok
 
 
-def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos):
+def _quantize_params(params, quantize: str):
+    if quantize == "int8":
+        from repro.models import layers
+        return layers.quantize_weights(params)
+    return params
+
+
+def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none"):
     """Slot-level admission: finished sequences free their slot immediately;
     each free slot prefills the next FIFO request into the shared cache."""
     nreq = len(prompts)
     cache_len = _cache_len(cfg, prompts, gen_lens)
     rng = np.random.default_rng(seed + 1)
 
-    params = tf.init_params(jax.random.PRNGKey(seed), cfg)
+    params = _quantize_params(tf.init_params(jax.random.PRNGKey(seed), cfg), quantize)
     # the admission prefill's zero template is reused every round: no donation
     prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg))
     decode_fn = jax.jit(steps_lib.make_decode_step_slots(cfg), donate_argnums=(2,))
@@ -276,7 +294,7 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos):
     return _finalize(stats, occ, t0)
 
 
-def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos):
+def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none"):
     """Batch-at-a-time baseline: a finished sequence's slot idles until the
     whole batch drains.  The queue is still served strictly FIFO."""
     nreq = len(prompts)
@@ -291,7 +309,7 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos):
     enc = cfg.encoder.n_frames if cfg.family == "audio" else 0
     rng = np.random.default_rng(seed + 1)
 
-    params = tf.init_params(jax.random.PRNGKey(seed), cfg)
+    params = _quantize_params(tf.init_params(jax.random.PRNGKey(seed), cfg), quantize)
     prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg), donate_argnums=(2,))
     decode_fn = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(2,))
 
@@ -355,9 +373,13 @@ def main():
                     help="continuous: slot-level admission; batch: drain-then-refill baseline")
     ap.add_argument("--backend", default="xla", choices=("xla", "pallas", "ref"),
                     help="core.blas backend; pallas fuses decode into bgemv")
+    ap.add_argument("--quantize", default="none", choices=("none", "int8"),
+                    help="int8: block-scaled packed serving weights — the "
+                         "bandwidth-bound decode path streams 1 byte/weight")
     args = ap.parse_args()
     serve(args.arch, args.variant, args.requests, args.batch, args.prompt_len,
-          args.gen, backend=args.backend, scheduler=args.scheduler)
+          args.gen, backend=args.backend, scheduler=args.scheduler,
+          quantize=args.quantize)
 
 
 if __name__ == "__main__":

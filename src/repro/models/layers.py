@@ -14,8 +14,62 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import blas
+from repro.core import blas, quant
 from repro.core.act_sharding import constrain
+
+
+# --------------------------------------------------------------------------
+# Weight quantization pass (block-scaled int8 serving weights, core.quant)
+# --------------------------------------------------------------------------
+
+#: projection weights the serving quantization pass packs.  Everything else
+#: (norm scales, biases, router logits, embedding/unembedding tables) stays
+#: full precision: they are tiny, accuracy-critical, or already f32.
+QUANT_WEIGHT_KEYS = frozenset(
+    {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"}
+)
+
+
+def quantize_weights(params: dict, spec: "quant.QuantSpec" = None) -> dict:
+    """Replace every projection weight in a params tree with a block-scaled
+    int8 `QuantizedTensor` (leading layer-stack dims quantize per layer and
+    slice through `lax.scan` untouched).
+
+    Dense/attention 2-D weights (stacked to 3-D by the layer scan) are
+    stored output-major (`QuantSpec.transpose`): the decode step consumes
+    them as y = W^T x on every token, so packing them in the orientation the
+    kernel streams is the layout half of the co-design.  MoE expert stacks
+    (an extra expert axis, consumed by batched GEMMs as h @ W per expert)
+    keep the GEMM orientation; `models.moe` routes them through
+    `batched_gemm`'s packed path.  The returned tree has the same structure,
+    so step functions jit against it unchanged.
+    """
+    spec = spec or quant.QuantSpec(block_m=64, block_n=None, transpose=True)
+
+    def walk(node, in_expert: bool):
+        if isinstance(node, dict):
+            expert = in_expert or "router" in node
+            return {
+                k: (walk(v, expert and k != "shared")
+                    if isinstance(v, dict)
+                    else _quantize_leaf(k, v, spec, expert and k != "shared"))
+                for k, v in node.items()
+            }
+        return node
+
+    return walk(params, False)
+
+
+def _quantize_leaf(key, leaf, spec: "quant.QuantSpec", in_expert: bool):
+    if key not in QUANT_WEIGHT_KEYS or not hasattr(leaf, "ndim"):
+        return leaf
+    if in_expert and leaf.ndim >= 3:
+        # expert-stacked (.., E, d, f): consumed as a batched GEMM right-hand
+        # side — keep the (k, n) orientation, per-expert block scales
+        espec = quant.QuantSpec(block_m=spec.block_m, block_n=spec.block_n,
+                                transpose=False)
+        return quant.quantize(leaf, espec)
+    return quant.quantize(leaf, spec)
 
 
 # --------------------------------------------------------------------------

@@ -45,6 +45,16 @@ def init_moe(key, d: int, mcfg: MoEConfig, act: str, dtype=jnp.bfloat16) -> dict
     return p
 
 
+def quantize_weights(params: dict, spec=None) -> dict:
+    """Block-scaled int8 pass over a MoE params tree (layers.quantize_weights
+    with the expert-stack rule): routed expert weights (E, d, f) keep the
+    batched-GEMM orientation with per-expert block scales, shared-expert and
+    attention projections pack output-major for the decode stream, and the
+    f32 router stays full precision."""
+    from repro.models import layers as _layers
+    return _layers.quantize_weights(params, spec)
+
+
 def _expert_ffn(h, params, act: str):
     """h: (E, ..., d) batched per-expert swiglu.
 
@@ -55,6 +65,10 @@ def _expert_ffn(h, params, act: str):
     epilogue gate operand, so silu(h@Wg) * (h@Wu) happens on the f32
     accumulator tiles in VMEM (2 launches / 2 intermediate HBM writes per
     expert FFN instead of 4).
+
+    Quantized expert stacks (core.quant, via `quantize_weights`) ride the
+    same two calls: batched_gemm streams the packed (E, d, f) int8 values
+    with per-expert block scales and dequantizes in-kernel.
     """
     e, d = h.shape[0], h.shape[-1]
     mid_dims = h.shape[1:-1]
