@@ -27,8 +27,10 @@ JSON schema (schema_version 1):
                   "min_fused_speedup": float,   # worst fused/unfused ratio
                   "fused_structural_win": bool, # launches+HBM strictly fewer
                   "quant_speedup": float,       # best quantized/f32 ratio
-                  "quant_weight_bytes_ratio": float}  # min modeled full/packed
-    }
+                  "quant_weight_bytes_ratio": float,  # min modeled full/packed
+                  "kv_quant_speedup": float,    # best int8-KV stream ratio
+                  "combined_byte_ratio": float}  # min modeled weights+KV vs
+    }                                            # weights-only decode bytes
 """
 
 import argparse
@@ -70,7 +72,7 @@ def _parse_metrics(derived: str) -> dict:
 
 def _summarize(rows: list[dict]) -> dict:
     gflops, roofline, speedups, structural = [], [], [], []
-    q_speedups, q_ratios = [], []
+    q_speedups, q_ratios, kv_speedups, combined = [], [], [], []
     for row in rows:
         m = row["metrics"]
         for key in ("gflops", "gflops_fused"):
@@ -90,6 +92,10 @@ def _summarize(rows: list[dict]) -> dict:
                 q_ratios.append(m["weight_bytes_ratio"])
             if isinstance(m.get("weight_read_reduction"), float):
                 q_ratios.append(m["weight_read_reduction"])
+            if isinstance(m.get("kv_speedup"), float):
+                kv_speedups.append(m["kv_speedup"])
+            if isinstance(m.get("combined_byte_ratio"), float):
+                combined.append(m["combined_byte_ratio"])
     return {
         "max_gflops": max(gflops) if gflops else 0.0,
         "pct_roofline": max(roofline) if roofline else 0.0,
@@ -98,6 +104,10 @@ def _summarize(rows: list[dict]) -> dict:
         "fused_structural_win": bool(structural) and all(structural),
         "quant_speedup": max(q_speedups) if q_speedups else 0.0,
         "quant_weight_bytes_ratio": min(q_ratios) if q_ratios else 0.0,
+        # int8 KV cache (ISSUE 5): measured K-stream win + the modeled
+        # combined (weights+KV) decode byte reduction vs weights-only
+        "kv_quant_speedup": max(kv_speedups) if kv_speedups else 0.0,
+        "combined_byte_ratio": min(combined) if combined else 0.0,
     }
 
 

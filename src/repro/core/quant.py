@@ -233,6 +233,99 @@ def matvec_error_bound(qt: QuantizedTensor, x: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
+# KV-cache quantization (per-(token, head) block scales)
+# --------------------------------------------------------------------------
+#
+# The decode roofline has exactly two large byte terms: the weight stream
+# (packed above) and the KV cache read inside attention.  The KV analog of
+# the weight spec is one scale per (token, head): a cache entry (..., T, H,
+# hd) quantizes its last two dims (H, hd) with block (1, hd), so scales are
+# (..., T, H, 1) and every flash-attention key/value tile dequantizes with a
+# single per-row multiply against the f32 softmax accumulator.  Scales stay
+# f32 so the elementwise s/2 bound holds exactly (a rounded scale would add
+# a 127*s*2^-8 term that is the same order as the bound itself).
+
+#: the per-(token, head) KV spec: one scale per head-vector
+KV_SPEC = QuantSpec(block_m=1, block_n=None)
+
+
+def quantize_kv(x: jnp.ndarray) -> QuantizedTensor:
+    """Per-(token, head) symmetric int8 quantization of a K or V block.
+
+    x is (..., H, hd) — typically (B, T, H, hd): every leading dim is
+    independent, so one call quantizes a whole written block and the values
+    and scales scatter into the cache in lockstep.  Returns a
+    `QuantizedTensor` with values (..., H, hd) int8 and scales (..., H, 1)
+    f32, block (1, hd).
+    """
+    return quantize(x, KV_SPEC)
+
+
+def dequantize_kv(values: jnp.ndarray, scales: jnp.ndarray,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    """Exact dequantization of packed KV storage: values (..., H, hd) int8 *
+    scales (..., H, 1) — the oracle semantics every attention backend is
+    tested against."""
+    return (values.astype(jnp.float32) * scales.astype(jnp.float32)).astype(dtype)
+
+
+def attention_error_bound(
+    q: jnp.ndarray,         # (BH, Tq, D) f32 — the UNQUANTIZED queries
+    k_scales: jnp.ndarray,  # (BHkv, Tk, 1) f32 per-(token, head) key scales
+    v_hat: jnp.ndarray,     # (BHkv, Tk, D) f32 DEQUANTIZED values
+    v_scales: jnp.ndarray,  # (BHkv, Tk, 1) f32 value scales
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Rigorous per-output bound for |attn(q, K_q, V_q) - attn(q, K, V)|.
+
+    Write p for the exact softmax weights and p' for the weights computed
+    from the quantized keys.  Each logit moves by at most
+
+        eps_i = scale * L1(q_i) * max_j s_k[j] / 2
+
+    (|k - k_hat| <= s_k/2 elementwise), so p'_j / p_j in [e^-2eps, e^2eps]
+    and ||p' - p||_1 <= 2 (e^{2 eps_i} - 1).  The output error then splits
+    as sum_j p'_j (v'_j - v_j) + sum_j (p'_j - p_j) v_j:
+
+        err_{i,d} <= max_j s_v[j]/2
+                     + 2 (e^{2 eps_i} - 1) * max_j (|v_hat[j,d]| + s_v[j]/2)
+
+    (the v_j in the second term is bounded through the dequantized values).
+    The maxima run over ALL keys, which upper-bounds any causal/length
+    mask's visible subset.  Returns the (BH, Tq, D) bound; GQA-shared K/V
+    (BHkv < BH) broadcast per query-head group.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    groups = q.shape[0] // k_scales.shape[0]
+    qf = q.astype(jnp.float32)
+    sk = jnp.repeat(k_scales.astype(jnp.float32), groups, axis=0)   # (BH, Tk, 1)
+    sv = jnp.repeat(v_scales.astype(jnp.float32), groups, axis=0)
+    vh = jnp.repeat(jnp.abs(v_hat.astype(jnp.float32)), groups, axis=0)
+    eps = scale * jnp.sum(jnp.abs(qf), axis=-1) * jnp.max(sk[..., 0], axis=-1, keepdims=True) / 2.0
+    p_l1 = 2.0 * (jnp.exp(2.0 * eps) - 1.0)                         # (BH, Tq)
+    v_term = jnp.max(vh + sv / 2.0, axis=1)                         # (BH, D)
+    sv_max = jnp.max(sv[..., 0], axis=-1)                           # (BH,)
+    return (sv_max[:, None, None] / 2.0
+            + p_l1[..., None] * v_term[:, None, :])
+
+
+def packed_kv_bytes(tokens: int, heads: int, head_dim: int,
+                    scale_bytes: int = 4) -> int:
+    """HBM bytes of one K or V stream over `tokens` cache entries: 1 byte per
+    element plus one scale per (token, head)."""
+    return tokens * heads * (head_dim + scale_bytes)
+
+
+def kv_traffic_ratio(head_dim: int, *, full_bytes_per_elem: int = 2,
+                     scale_bytes: int = 4) -> float:
+    """full-precision KV bytes / packed bytes — the structural claim of the
+    int8 KV cache (~1.9x vs bf16 at hd=64)."""
+    return full_bytes_per_elem * head_dim / (head_dim + scale_bytes)
+
+
+# --------------------------------------------------------------------------
 # Traffic model (what packing buys, in HBM bytes — asserted structurally)
 # --------------------------------------------------------------------------
 

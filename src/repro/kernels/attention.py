@@ -10,6 +10,29 @@ so HBM traffic is O(T*D) instead of O(T^2).
 Causal masking uses decode-style alignment: the query block sits at the END
 of the key range (offset = Tk - Tq), which serves both training (Tq == Tk)
 and single-step decode (Tq == 1) with one kernel.
+
+Two byte levers live here on top of the blocking:
+
+  - packed int8 K/V (core.quant per-(token, head) scales): when
+    `k_scales`/`v_scales` are passed, the K and V tiles stream at 1
+    byte/element and dequantize in-kernel with one per-row multiply against
+    the f32 softmax accumulator — the decode step's OTHER large byte term
+    (after the weight stream, quantized in PR 4) at roughly half the HBM
+    traffic, with no extra launches;
+  - GQA without materialization: `kv_groups` > 1 maps `g` consecutive query
+    heads onto one stored K/V head via the BlockSpec index_map, so grouped-
+    query attention never expands the cache to the full head count in HBM.
+
+Operand layouts: the flat (BH, T, D) layout, or — `q.ndim == 4` — the KV
+cache's NATIVE (B, T, H, D) layout, where the index maps decompose the grid
+row into (slot, head) so the kernel streams the cache exactly as it sits in
+HBM (no moveaxis/reshape materialization between the cache and the launch:
+the layout half of the co-design, same as QuantSpec.transpose for weights).
+
+Per-slot serving lengths: `kv_lens` (one real KV length per grid row)
+replaces the static kv_len/offset pair with an in-kernel scalar read, so a
+continuous-batching decode step — every slot at its own ragged position —
+runs the ragged grid in ONE launch with per-slot causal alignment.
 """
 
 from __future__ import annotations
@@ -27,13 +50,34 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
-    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, nk: int, bq: int, bk: int, scale: float, causal: bool, offset: int,
-    kv_len: int,
+    q_ref, k_ref, v_ref, *refs,
+    nk: int, bq: int, bk: int, scale: float, causal: bool, q_len: int,
+    offset: int, kv_len: int, quantized: bool, dynamic_len: bool,
+    cache_layout: bool,
 ):
+    # refs: [k_scales] [v_scales] [kv_lens] o m l acc
+    refs = list(refs)
+    ks_ref = refs.pop(0) if quantized else None
+    vs_ref = refs.pop(0) if quantized else None
+    len_ref = refs.pop(0) if dynamic_len else None
+    o_ref, m_ref, l_ref, acc_ref = refs
+
+    def tile(ref):
+        # (1, bt, d) block in the flat layout, (1, bt, 1, d) in cache layout
+        return ref[0, :, 0] if cache_layout else ref[0]
+
     ik = pl.program_id(2)
     iq = pl.program_id(1)
-    mask_k = kv_len < nk * bk  # keys beyond kv_len are tile padding
+    if dynamic_len:
+        # per-slot real KV length: the causal offset and the key mask become
+        # per-grid-row scalars instead of launch-time constants
+        kvl = len_ref[0, 0]
+        off = kvl - q_len
+        mask_k = True
+    else:
+        kvl = kv_len
+        off = offset
+        mask_k = kv_len < nk * bk  # keys beyond kv_len are tile padding
 
     @pl.when(ik == 0)
     def _init():
@@ -45,27 +89,39 @@ def _flash_kernel(
     # dependency structure proves dead): causally-invisible blocks, and
     # blocks lying entirely in the key padding.
     first_k = ik * bk
-    last_q = iq * bq + bq - 1 + offset
-    visible = first_k < kv_len
+    last_q = iq * bq + bq - 1 + off
+    visible = first_k < kvl
     if causal:
         visible = jnp.logical_and(visible, first_k <= last_q)
 
     @pl.when(visible)
     def _body():
-        q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
-        k = k_ref[0].astype(jnp.float32)                    # (bk, d)
-        v = v_ref[0].astype(jnp.float32)                    # (bk, d)
+        q = tile(q_ref).astype(jnp.float32) * scale         # (bq, d)
+        k = tile(k_ref).astype(jnp.float32)                 # (bk, d)
+        v = tile(v_ref).astype(jnp.float32)                 # (bk, d)
+        if quantized:
+            # packed int8 K/V tiles: one per-(token, head) scale row each —
+            # dequantized on the fly against the f32 accumulator
+            k = k * tile(ks_ref)                            # (bk, 1) broadcast
+            v = v * tile(vs_ref)
+        if dynamic_len or mask_k:
+            # cdiv grid, no caller padding: fringe rows of the V tile are
+            # undefined OOB reads and must be zeroed — a masked score only
+            # guards the K side (p=0 still poisons the PV dot as 0 * NaN).
+            # Garbage K columns are covered by the kpos mask on s below.
+            kcol = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+            v = jnp.where(kcol < kvl, v, 0.0)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )                                                   # (bq, bk)
         if causal or mask_k:
-            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offset
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + off
             kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             keep = jnp.full((bq, bk), True)
             if causal:
                 keep &= qpos >= kpos
             if mask_k:
-                keep &= kpos < kv_len
+                keep &= kpos < kvl
             s = jnp.where(keep, s, NEG_INF)
         m_prev = m_ref[...]                                 # (bq, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
@@ -79,14 +135,23 @@ def _flash_kernel(
 
     @pl.when(ik == nk - 1)
     def _flush():
-        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+        out = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+        if cache_layout:
+            o_ref[0, :, 0] = out
+        else:
+            o_ref[0] = out
 
 
 def attention(
-    q: jnp.ndarray,  # (BH, Tq, D)
-    k: jnp.ndarray,  # (BH, Tk, D)
-    v: jnp.ndarray,  # (BH, Tk, D)
+    q: jnp.ndarray,  # (BH, Tq, D), or (B, Tq, H, D) cache layout
+    k: jnp.ndarray,  # (BH // kv_groups, Tk, D) / (B, Tk, H // kv_groups, D);
+                     # int8 when k_scales is given
+    v: jnp.ndarray,  # same layout as k
     *,
+    k_scales: jnp.ndarray = None,  # k's layout with D -> 1, f32
+    v_scales: jnp.ndarray = None,
+    kv_lens: jnp.ndarray = None,   # (BH,) int32 per-grid-row real KV lengths
+    kv_groups: int = 1,            # query heads per stored K/V head (GQA)
     causal: bool = True,
     scale: float | None = None,
     block_q: int = 128,
@@ -95,23 +160,44 @@ def attention(
     kv_len: int | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """q/k/v may be block-padded along T; q_len/kv_len are the REAL lengths.
-
-    Keys at positions >= kv_len are tile padding and are masked to -inf
-    (the paper's fringe handling: pad to the hardware tile, neutralize the
-    pad in-kernel).  The causal offset aligns the real query range to the
-    END of the real key range, independent of how much padding either got.
+    """q_len/kv_len are the REAL lengths when q/k/v carry extra rows
+    (both default to the operand extents — no caller padding is required:
+    the grids are cdiv-shaped and the kernel masks the key fringe itself,
+    the paper's DOT2/DOT3 fringe handling moved inside the kernel).  Keys
+    at positions >= kv_len are masked to -inf and their V rows zeroed; the
+    causal offset aligns the real query range to the END of the real key
+    range, independent of any extra rows on either side.
+    `kv_lens` makes the real length per-grid-row (the continuous-batching
+    ragged slot grid) instead of a launch constant; with `k_scales`/
+    `v_scales` the K/V tiles are packed int8 (core.quant.quantize_kv) and
+    dequantize in-kernel.  4-D operands stream the KV cache's native
+    (B, T, H, D) layout — the grid row decomposes into (slot, head) inside
+    the index maps, so no transposed copy is ever materialized.
     """
-    bh, tq, d = q.shape
-    _, tk, _ = k.shape
+    cache_layout = q.ndim == 4
+    if cache_layout:
+        b, tq, h, d = q.shape
+        _, tk, kvh, _ = k.shape
+        assert h == kvh * kv_groups, (q.shape, k.shape, kv_groups)
+        bh = b * h
+    else:
+        bh, tq, d = q.shape
+        _, tk, _ = k.shape
+        assert bh == k.shape[0] * kv_groups, (q.shape, k.shape, kv_groups)
+        h = None
+    quantized = k_scales is not None
+    assert (k_scales is None) == (v_scales is None)
     q_len = tq if q_len is None else q_len
     kv_len = tk if kv_len is None else kv_len
     if scale is None:
         scale = d ** -0.5
     block_q = min(block_q, tq)
     block_k = min(block_k, tk)
-    assert tq % block_q == 0 and tk % block_k == 0, ((tq, tk), (block_q, block_k))
-    grid = (bh, tq // block_q, tk // block_k)
+    # cdiv grids, no divisibility contract: the key fringe is masked
+    # in-kernel (kpos/kvl on the scores, zeroed V rows) and the ragged
+    # query-block rows are clipped by Pallas on the output write
+    grid = (bh, pl.cdiv(tq, block_q), pl.cdiv(tk, block_k))
+    dynamic_len = kv_lens is not None
     kernel = functools.partial(
         _flash_kernel,
         nk=grid[2],
@@ -119,19 +205,43 @@ def attention(
         bk=block_k,
         scale=scale,
         causal=causal,
+        q_len=q_len,
         offset=kv_len - q_len,
         kv_len=kv_len,
+        quantized=quantized,
+        dynamic_len=dynamic_len,
+        cache_layout=cache_layout,
     )
+    g = kv_groups
+    if cache_layout:
+        # grid row r = slot * H + head; K/V fold the GQA group on top — the
+        # cache streams exactly as it sits in HBM
+        q_spec = pl.BlockSpec((1, block_q, 1, d), lambda r, i, j: (r // h, i, r % h, 0))
+        kv_idx = lambda r, i, j: (r // h, j, (r % h) // g, 0)
+        kv_spec = pl.BlockSpec((1, block_k, 1, d), kv_idx)
+        s_spec = pl.BlockSpec((1, block_k, 1, 1), kv_idx)
+        out_shape = q.shape
+    else:
+        q_spec = pl.BlockSpec((1, block_q, d), lambda r, i, j: (r, i, 0))
+        # GQA: g consecutive query heads read the same stored K/V head — the
+        # index_map folds the group, so the cache never expands in HBM
+        kv_spec = pl.BlockSpec((1, block_k, d), lambda r, i, j: (r // g, j, 0))
+        s_spec = pl.BlockSpec((1, block_k, 1), lambda r, i, j: (r // g, j, 0))
+        out_shape = (bh, tq, d)
+    operands = [q, k, v]
+    in_specs = [q_spec, kv_spec, kv_spec]
+    if quantized:
+        operands += [k_scales.astype(jnp.float32), v_scales.astype(jnp.float32)]
+        in_specs += [s_spec, s_spec]
+    if dynamic_len:
+        operands.append(kv_lens.astype(jnp.int32).reshape(bh, 1))
+        in_specs.append(pl.BlockSpec((1, 1), lambda r, i, j: (r, 0)))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, tq, d), q.dtype),
+        in_specs=in_specs,
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -141,4 +251,4 @@ def attention(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(q, k, v)
+    )(*operands)

@@ -45,8 +45,8 @@ from repro.kernels.gemm import epi_operands_match
 from repro.kernels.gemv import dequant_tile, fit_block_to_quant, scale_layout
 
 
-def _bgemm_kernel(a_ref, b_ref, *refs, nk: int, b_batched: bool, epi: Epilogue,
-                  q_block, b_layout: str):
+def _bgemm_kernel(a_ref, b_ref, *refs, nk: int, ka: int, block_k: int,
+                  b_batched: bool, epi: Epilogue, q_block, b_layout: str):
     # refs: [b_scales] [b2] [b2_scales] [bias] [residual] o acc [acc2]
     refs = list(refs)
     b_s_ref = refs.pop(0) if q_block else None
@@ -66,6 +66,14 @@ def _bgemm_kernel(a_ref, b_ref, *refs, nk: int, b_batched: bool, epi: Epilogue,
             acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
     a_tile = a_ref[0]
+    # mask the ragged k fringe in-VMEM (cdiv grid, no caller-side padding):
+    # BOTH operands are zeroed past ka so the dot accumulates 0*0 — one-sided
+    # masking would still contract garbage (0 * NaN).  The m/n fringes need
+    # no mask: Pallas clips the out-of-range output tile on the write.
+    mask_k = ka % block_k != 0
+    if mask_k:
+        kpos = k * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        a_tile = jnp.where(kpos < ka, a_tile, 0)
 
     def contract(ref, s_ref):
         b_tile = ref[0] if b_batched else ref[...]
@@ -77,10 +85,14 @@ def _bgemm_kernel(a_ref, b_ref, *refs, nk: int, b_batched: bool, epi: Epilogue,
         if b_layout == "nk":
             # output-major storage (QuantSpec.transpose): contract over k
             # on both operands' trailing axes — no data transpose
+            if mask_k:
+                b_tile = jnp.where(kpos < ka, b_tile, 0)
             return jax.lax.dot_general(
                 a_tile, b_tile, (((1,), (1,)), ((), ())),
                 preferred_element_type=acc_ref.dtype,
             )
+        if mask_k:
+            b_tile = jnp.where(kpos.reshape(block_k, 1) < ka, b_tile, 0)
         return jnp.dot(a_tile, b_tile, preferred_element_type=acc_ref.dtype)
 
     acc_ref[...] += contract(b_ref, b_s_ref)
@@ -144,14 +156,12 @@ def bgemm(
         block_k = fit_block_to_quant(min(block_k, ka), sk)
         block_n = fit_block_to_quant(min(block_n, n), sn)
     block_m, block_n, block_k = (min(block_m, m), min(block_n, n), min(block_k, ka))
-    assert m % block_m == 0 and n % block_n == 0 and ka % block_k == 0, (
-        (batch, m, n, ka),
-        (block_m, block_n, block_k),
-    )
     # batch between (i, j) and k: consecutive steps sweep k within one batch
     # member, then advance the member — so a broadcast-B tile with nk == 1
     # keeps a constant index across the whole batch (fetched once per (i, j)).
-    grid = (m // block_m, n // block_n, batch, ka // block_k)
+    # The grid is cdiv-shaped: the ragged k fringe is masked in-kernel and
+    # the m/n fringes are clipped on the output write — no caller padding.
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n), batch, pl.cdiv(ka, block_k))
     if b_layout == "nk":
         b_blk, b_idx = (block_n, block_k), lambda i, j, bi, k: (j, k)
     else:
@@ -163,8 +173,8 @@ def bgemm(
             c // d for c, d in zip(b_idx(i, j, bi, k), s_div)
         )
     kernel = functools.partial(
-        _bgemm_kernel, nk=grid[3], b_batched=b_batched, epi=epilogue,
-        q_block=q_eff, b_layout=b_layout,
+        _bgemm_kernel, nk=grid[3], ka=ka, block_k=block_k,
+        b_batched=b_batched, epi=epilogue, q_block=q_eff, b_layout=b_layout,
     )
     if b_batched:
         b_spec = pl.BlockSpec((1,) + b_blk, lambda i, j, bi, k: (bi,) + b_idx(i, j, bi, k))

@@ -48,8 +48,8 @@ from repro.kernels.gemv import dequant_tile, fit_block_to_quant, scale_layout
 
 
 def _bgemv_kernel(
-    a_ref, x_ref, *refs, nn: int, a_batched: bool, trans: bool, epi: Epilogue,
-    q_block
+    a_ref, x_ref, *refs, nn: int, n: int, block_n: int, a_batched: bool,
+    trans: bool, epi: Epilogue, q_block
 ):
     # refs: [a_scales] [a2] [a2_scales] [bias] [residual] o acc [acc2]
     refs = list(refs)
@@ -70,6 +70,11 @@ def _bgemv_kernel(
             acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
     x = x_ref[0].astype(acc_ref.dtype)  # (1, bn)
+    # mask the ragged contraction fringe in-VMEM (cdiv grid, no caller-side
+    # padding): OOB tile reads are undefined and must not reach the
+    # accumulator.  The output-dim (m) fringe needs no mask — Pallas clips
+    # the out-of-range rows on the write.
+    mask_n = n % block_n != 0
 
     def contract(ref, s_ref):
         if q_block:
@@ -80,9 +85,19 @@ def _bgemv_kernel(
             a = (ref[0] if a_batched else ref[...]).astype(acc_ref.dtype)
         if trans:
             # a is (bn, bm): contract over rows -> (1, bm)
-            return jnp.sum(a * x[0][:, None], axis=0, keepdims=True)
+            prod = a * x[0][:, None]
+            if mask_n:
+                rows = j * block_n + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_n, 1), 0)
+                prod = jnp.where(rows < n, prod, 0.0)
+            return jnp.sum(prod, axis=0, keepdims=True)
         # a is (bm, bn): contract over cols -> (bm, 1)
-        return jnp.sum(a * x, axis=1, keepdims=True)
+        prod = a * x
+        if mask_n:
+            cols = j * block_n + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_n), 1)
+            prod = jnp.where(cols < n, prod, 0.0)
+        return jnp.sum(prod, axis=1, keepdims=True)
 
     acc_ref[...] += contract(a_ref, a_s_ref)
     if epi.gate:
@@ -150,17 +165,18 @@ def bgemv(
         block_m = fit_block_to_quant(min(block_m, m), qm)
         block_n = fit_block_to_quant(min(block_n, n), qn)
     block_m, block_n = min(block_m, m), min(block_n, n)
-    assert m % block_m == 0 and n % block_n == 0, ((m, n), (block_m, block_n))
     # batch between the row block and the n sweep: a broadcast-A tile with
     # nn == 1 keeps a constant index across consecutive batch steps, so each
-    # W row block is fetched once for the whole batch.
+    # W row block is fetched once for the whole batch.  The grid is
+    # cdiv-shaped: ragged m/n are masked in-kernel (contraction fringe) or
+    # clipped by Pallas on the output write — no caller-side padding.
     q_eff = None
     if q_block is not None:
         s_tile, s_div, q_eff = scale_layout((block_m, block_n), q_block)
-    grid = (m // block_m, batch, n // block_n)
+    grid = (pl.cdiv(m, block_m), batch, pl.cdiv(n, block_n))
     kernel = functools.partial(
-        _bgemv_kernel, nn=grid[2], a_batched=a_batched, trans=transpose_a,
-        epi=epilogue, q_block=q_eff,
+        _bgemv_kernel, nn=grid[2], n=n, block_n=block_n, a_batched=a_batched,
+        trans=transpose_a, epi=epilogue, q_block=q_eff,
     )
     # tile/accumulator orientation follows the A layout: (bm, bn) tiles with
     # a (bm, 1) accumulator, or (bn, bm) tiles with a (1, bm) accumulator

@@ -1,8 +1,10 @@
 """Public wrappers for the Pallas kernels.
 
 Responsibilities:
-  - shape padding to hardware tiles (the paper's DOT2/DOT3 fringe handling,
-    done once here so the kernels stay divisibility-clean);
+  - ragged-shape handling (the paper's DOT2/DOT3 fringe problem): the
+    gemv/bgemv/bgemm/blas1/attention kernels run cdiv grids and mask their
+    fringes in-kernel, so those wrappers pass real shapes straight through;
+    gemm still pads here;
   - block-shape selection via core.tiling — `tiling.autotune_block_shape`,
     the AE4 analytic ranking plus (REPRO_AUTOTUNE=1) empirical measurement
     of the top-K candidates, cached per (op, shape, dtype, backend);
@@ -276,6 +278,10 @@ def gemv(a: jnp.ndarray, x: jnp.ndarray, *, block_m=None, block_n=None):
 )
 def _bgemm_call(a, b, b2, bias, residual, *, block_m, block_n, block_k,
                 activation, out_dtype):
+    # no padding: the kernel runs a cdiv grid, masks the ragged k fringe
+    # in-VMEM and Pallas clips the ragged m/n output tiles on the write —
+    # admission prefills with ragged prompt lengths launch on their real
+    # shapes instead of round-tripping padded copies through HBM
     batch, m, k = a.shape
     quantized = _quant.is_quantized(b)
     n = b.shape[-1]  # QuantizedTensor.shape is the LOGICAL (..., k, n)
@@ -285,38 +291,25 @@ def _bgemm_call(a, b, b2, bias, residual, *, block_m, block_n, block_k,
                   min(block_k, tiling.round_up(k, 128)))
     q_kw = {}
     if quantized:
+        # kernel tiles align to the scale grid (multiples of q, or divisors
+        # of q when the plan's tile is smaller than a scale block); the
+        # packed values/scales are exact q multiples, so no padding either
         layout = "nk" if b.transposed else "kn"
         qa, qb = b.block
         if layout == "nk":
             bn, bk = _align_block(bn, qa), _align_block(bk, qb)
-            row_mult, col_mult = bn, bk
         else:
             bk, bn = _align_block(bk, qa), _align_block(bn, qb)
-            row_mult, col_mult = bk, bn
-        bv, bs = _pad_quant(b, row_mult, col_mult)
-        q_kw = {"scales": bs, "q_block": b.block, "b_layout": layout}
+        q_kw = {"scales": b.scales, "q_block": b.block, "b_layout": layout}
         if b2 is not None:
-            b2v, b2s = _pad_quant(b2, row_mult, col_mult)
-            b2 = b2v
-            q_kw["b2_scales"] = b2s
-        b = bv
-    else:
-        b, _ = tiling.pad_dim_to(b, b.ndim - 2, bk)
-        b, _ = tiling.pad_dim_to(b, b.ndim - 1, bn)
-        if b2 is not None:
-            b2, _ = tiling.pad_dim_to(b2, b2.ndim - 2, bk)
-            b2, _ = tiling.pad_dim_to(b2, b2.ndim - 1, bn)
-    a, _ = tiling.pad_dim_to(a, 1, bm)
-    a, _ = tiling.pad_dim_to(a, 2, bk)
+            q_kw["b2_scales"] = b2.scales
+            b2 = b2.values
+        b = b.values
     if bias is not None:
-        bias, _ = tiling.pad_dim_to(bias.reshape(1, n), 1, bn)
-    if residual is not None:
-        residual, _ = tiling.pad_dim_to(residual, 1, bm)
-        residual, _ = tiling.pad_dim_to(residual, 2, bn)
-    out = _bgemm.bgemm(a, b, b2=b2, bias=bias, residual=residual, epilogue=epi,
-                       block_m=bm, block_n=bn, block_k=bk,
-                       out_dtype=out_dtype, interpret=_interpret(), **q_kw)
-    return out[:, :m, :n]
+        bias = bias.reshape(1, n)
+    return _bgemm.bgemm(a, b, b2=b2, bias=bias, residual=residual,
+                        epilogue=epi, block_m=bm, block_n=bn, block_k=bk,
+                        out_dtype=out_dtype, interpret=_interpret(), **q_kw)
 
 
 def bgemm(a: jnp.ndarray, b: jnp.ndarray, *, b2=None, bias=None, residual=None,
@@ -391,41 +384,30 @@ def _bgemv_call(a, x, a2, bias, residual, *, block_m, block_n, activation,
         m, n = a.shape[-2:]
     batch = x.shape[0]
     epi = _epi_spec(activation, a2, bias, residual)
-    # under transpose_a the output dim m lives on the lane axis and the
-    # contraction n on sublanes, so the alignment constraints swap too
+    # no padding: the kernel runs a cdiv grid, masks the ragged contraction
+    # fringe in-VMEM and Pallas clips the ragged output rows on the write.
+    # Under transpose_a the output dim m lives on the lane axis and the
+    # contraction n on sublanes, so the alignment constraints swap too.
     bm = min(block_m, tiling.round_up(m, 128 if transpose_a else 8))
     bn = min(block_n, tiling.round_up(n, 8 if transpose_a else 128))
     q_kw = {}
     if quantized:
         qm, qn = a.block
         bm, bn = _align_block(bm, qm), _align_block(bn, qn)
-        av, a_s = _pad_quant(a, bm, bn)
-        q_kw = {"scales": a_s, "q_block": a.block}
+        q_kw = {"scales": a.scales, "q_block": a.block}
         if a2 is not None:
-            a2v, a2_s = _pad_quant(a2, bm, bn)
-            a2 = a2v
-            q_kw["a2_scales"] = a2_s
-        a = av
-    else:
-        m_ax, n_ax = (a.ndim - 1, a.ndim - 2) if transpose_a else (a.ndim - 2, a.ndim - 1)
-        a, _ = tiling.pad_dim_to(a, m_ax, bm)
-        a, _ = tiling.pad_dim_to(a, n_ax, bn)
-        if a2 is not None:
-            a2, _ = tiling.pad_dim_to(a2, m_ax, bm)
-            a2, _ = tiling.pad_dim_to(a2, n_ax, bn)
-    x, _ = tiling.pad_dim_to(x, 1, bn)
+            q_kw["a2_scales"] = a2.scales
+            a2 = a2.values
+        a = a.values
     if bias is not None:
         bias = bias.reshape((1, m) if transpose_a else (m, 1))
-        bias, _ = tiling.pad_dim_to(bias, 1 if transpose_a else 0, bm)
     if residual is not None:
         residual = residual.reshape(
             (batch, 1, m) if transpose_a else (batch, m, 1)
         )
-        residual, _ = tiling.pad_dim_to(residual, 2 if transpose_a else 1, bm)
-    out = _bgemv.bgemv(a, x, a2=a2, bias=bias, residual=residual, epilogue=epi,
-                       transpose_a=transpose_a, block_m=bm, block_n=bn,
-                       interpret=_interpret(), **q_kw)
-    return out[:, :m]
+    return _bgemv.bgemv(a, x, a2=a2, bias=bias, residual=residual,
+                        epilogue=epi, transpose_a=transpose_a, block_m=bm,
+                        block_n=bn, interpret=_interpret(), **q_kw)
 
 
 def bgemv(a: jnp.ndarray, x: jnp.ndarray, *, a2=None, bias=None, residual=None,
@@ -495,24 +477,33 @@ def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray, *, block_n=2048):
 # Attention / scans
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
-def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
-    """(BH, Tq, D) x (BH, Tk, D) -> (BH, Tq, D); pads T dims to blocks."""
-    bh, tq, d = q.shape
-    tk = k.shape[1]
-    bq, bk = min(block_q, tiling.round_up(tq, 8)), min(block_k, tiling.round_up(tk, 8))
-    scale = d ** -0.5
-    qp, _ = tiling.pad_dim_to(q, 1, bq)
-    kp, _ = tiling.pad_dim_to(k, 1, bk)
-    vp, _ = tiling.pad_dim_to(v, 1, bk)
-    # Padded keys are masked to -inf inside the kernel (kv_len), and the
-    # causal offset is computed from the REAL lengths, so non-block-divisible
-    # Tq/Tk are handled for both causal and non-causal attention.
-    out = _attention.attention(
-        qp, kp, vp, causal=causal, scale=scale,
-        block_q=bq, block_k=bk, q_len=tq, kv_len=tk, interpret=_interpret(),
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "kv_groups")
+)
+def flash_attention(q, k, v, *, k_scales=None, v_scales=None, kv_lens=None,
+                    kv_groups=1, causal=True, block_q=128, block_k=128):
+    """(BH, Tq, D) x (BHkv, Tk, D) -> (BH, Tq, D).  4-D operands select the
+    KV cache's native (B, T, H, D) layout instead — the kernel's index maps
+    decompose the grid row into (slot, head), so the cache streams as it
+    sits in HBM (no transposed copy materialized).
+
+    No padding at all: the kernel runs cdiv grids and masks the ragged key
+    fringe in-kernel (scores via kpos < kv_len, V rows zeroed), with ragged
+    query blocks clipped on the output write — on the decode hot path the
+    cache buffers reach the launch untouched, whatever their capacity.
+
+    With `k_scales`/`v_scales` (k's layout with D -> 1,
+    core.quant.quantize_kv), K/V are packed int8 streamed at 1 byte/element
+    and dequantized in-kernel.  `kv_groups` > 1 shares each stored K/V head
+    across that many consecutive query heads (GQA) via the index map — no
+    materialized repeat.  `kv_lens` (BH,) replaces the shared real KV
+    length with a per-row one (continuous-batching ragged slot decode).
+    """
+    return _attention.attention(
+        q, k, v, k_scales=k_scales, v_scales=v_scales, kv_lens=kv_lens,
+        kv_groups=kv_groups, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
     )
-    return out[:, :tq]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

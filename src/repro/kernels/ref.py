@@ -75,6 +75,63 @@ def attention(
     return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def attention_lens(
+    q: jnp.ndarray,        # (BH, Tq, D)
+    k: jnp.ndarray,        # (BH, Tk, D)
+    v: jnp.ndarray,
+    kv_lens: jnp.ndarray,  # (BH,) real KV length per row
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Full-materialization attention with PER-ROW real KV lengths: keys at
+    positions >= kv_lens[b] are masked out, and the causal alignment puts the
+    query block at the END of row b's real key range (offset = kv_lens[b] -
+    Tq) — the semantics of the flash kernel's `kv_lens` operand (the
+    continuous-batching ragged slot grid)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    tq, tk = q.shape[1], k.shape[1]
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    lens = kv_lens.astype(jnp.int32)[:, None, None]                  # (BH, 1, 1)
+    kpos = jnp.arange(tk, dtype=jnp.int32)[None, None, :]
+    keep = kpos < lens
+    if causal:
+        qpos = jnp.arange(tq, dtype=jnp.int32)[None, :, None] + lens - tq
+        keep = keep & (qpos >= kpos)
+    s = jnp.where(keep, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_kv_dequant(
+    q: jnp.ndarray,         # (BH, Tq, D)
+    k_values: jnp.ndarray,  # (BHkv, Tk, D) int8 packed keys
+    k_scales: jnp.ndarray,  # (BHkv, Tk, 1) per-(token, head) scales
+    v_values: jnp.ndarray,
+    v_scales: jnp.ndarray,
+    *,
+    kv_lens: jnp.ndarray | None = None,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """EXACT dequantization oracle for int8-KV flash attention: materialize
+    K = values * scales (the same W8A16-style math the kernel applies per
+    tile) and run the naive softmax attention.  GQA-shared K/V (BHkv < BH)
+    are expanded per query-head group.  The in-kernel dequant path must match
+    this to float tolerance; the quantization ERROR vs full-precision K/V is
+    bounded separately by `core.quant.attention_error_bound`."""
+    groups = q.shape[0] // k_values.shape[0]
+    k = k_values.astype(jnp.float32) * k_scales.astype(jnp.float32)
+    v = v_values.astype(jnp.float32) * v_scales.astype(jnp.float32)
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=0)
+        v = jnp.repeat(v, groups, axis=0)
+    if kv_lens is not None:
+        return attention_lens(q, k, v, kv_lens, causal=causal, scale=scale)
+    return attention(q, k, v, causal=causal, scale=scale)
+
+
 # --------------------------------------------------------------------------
 # RWKV6 "Finch" WKV recurrence (data-dependent per-channel decay)
 # --------------------------------------------------------------------------

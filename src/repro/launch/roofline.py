@@ -45,6 +45,12 @@ COMPRESSION_FACTOR = 4 * 1024 / (1024 + 4)
 #: elements) that also covers fine-grained 2-D block specs
 WEIGHT_INT8_BYTES = 1.0 + 4.0 / 64.0
 
+
+def kv_int8_bytes(head_dim: int) -> float:
+    """Bytes/element of the block-scaled int8 KV cache: 1 byte per value +
+    one f32 scale per (token, head) vector (core.quant.quantize_kv)."""
+    return 1.0 + 4.0 / head_dim
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
@@ -130,6 +136,44 @@ def _group_size(line: str) -> int:
     return 2
 
 
+def _act_unit(cfg) -> tuple:
+    """(per-token activation I/O unit per layer, effective layer count) —
+    the dims written+read once per layer, shared by every cell kind."""
+    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    h, kv, L = cfg.n_heads, cfg.n_kv, cfg.n_layers
+    if cfg.family in ("dense", "vlm", "moe"):
+        u_attn = (h + 2 * kv) * hd + h * hd + 2 * d
+        if cfg.family == "moe":
+            m = cfg.moe
+            eff_ff = (m.top_k + m.n_shared_experts) * m.d_ff_expert
+            u_mlp = 3 * eff_ff + d
+        else:
+            u_mlp = 3 * ff + d
+        unit = u_attn + u_mlp + 2 * d
+    elif cfg.family == "rwkv":
+        unit = 5 * d + 2 * d + 2 * ff + 2 * d
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        d_in = s.expansion * d
+        unit = 2 * d_in + 2 * (d_in + 2 * s.n_groups * s.d_state) + 2 * d
+    else:  # audio
+        unit = (h + 2 * kv) * hd * 2 + h * hd + 3 * ff + 4 * d
+    return unit, L + (cfg.encoder.n_layers if cfg.encoder else 0)
+
+
+def _serve_weight_bytes(cfg, chips: int) -> float:
+    """Per-chip serving weight-read bytes, honoring cfg.weight_dtype: the
+    projection share streams packed (~1.06 B/param, WEIGHT_INT8_BYTES) while
+    the embedding/unembedding share stays full width — matching what
+    layers.quantize_weights actually packs."""
+    dt = 2.0  # bf16
+    w_b = (WEIGHT_INT8_BYTES
+           if getattr(cfg, "weight_dtype", "model") == "int8" else dt)
+    p_embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    p_packed = max(0, cfg.param_count() - p_embed)
+    return (p_packed * w_b + p_embed * dt) / chips
+
+
 def analytic_hbm_bytes(cfg, cell, chips: int, microbatches: int = 1,
                        lean_opt: bool = False) -> float:
     """Per-chip HBM bytes per step for the TPU execution path.
@@ -152,37 +196,14 @@ def analytic_hbm_bytes(cfg, cell, chips: int, microbatches: int = 1,
     width applies to param_count MINUS the embedding share.  Training
     always reads full-width weights (the quantized path is serve-only).
     """
-    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.hd
-    h, kv, L = cfg.n_heads, cfg.n_kv, cfg.n_layers
+    d, hd = cfg.d_model, cfg.hd
+    kv, L = cfg.n_kv, cfg.n_layers
     dt = 2.0  # bf16
-    p_total = cfg.param_count() * dt
-    p_local = p_total / chips
-    w_b = (WEIGHT_INT8_BYTES
-           if getattr(cfg, "weight_dtype", "model") == "int8" else dt)
+    p_local = cfg.param_count() * dt / chips
     # embedding (+ untied head) stays full width on the quantized path
-    p_embed = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
-    p_packed = max(0, cfg.param_count() - p_embed)
-    p_local_serve = (p_packed * w_b + p_embed * dt) / chips
-
+    p_local_serve = _serve_weight_bytes(cfg, chips)
     # per-token activation I/O units (dims written+read once, per layer)
-    if cfg.family in ("dense", "vlm", "moe"):
-        u_attn = (h + 2 * kv) * hd + h * hd + 2 * d
-        if cfg.family == "moe":
-            m = cfg.moe
-            eff_ff = (m.top_k + m.n_shared_experts) * m.d_ff_expert
-            u_mlp = 3 * eff_ff + d
-        else:
-            u_mlp = 3 * ff + d
-        unit = u_attn + u_mlp + 2 * d
-    elif cfg.family == "rwkv":
-        unit = 5 * d + 2 * d + 2 * ff + 2 * d
-    elif cfg.family == "hybrid":
-        s = cfg.ssm
-        d_in = s.expansion * d
-        unit = 2 * d_in + 2 * (d_in + 2 * s.n_groups * s.d_state) + 2 * d
-    else:  # audio
-        unit = (h + 2 * kv) * hd * 2 + h * hd + 3 * ff + 4 * d
-    layers = L + (cfg.encoder.n_layers if cfg.encoder else 0)
+    unit, layers = _act_unit(cfg)
 
     if cell.kind == "train":
         tokens = cell.global_batch * cell.seq_len
@@ -200,7 +221,29 @@ def analytic_hbm_bytes(cfg, cell, chips: int, microbatches: int = 1,
         cache_w = L * tokens * 2 * kv * hd * dt / chips
         return act + microbatches * p_local_serve + cache_w
     # decode: one token/seq; weights + full KV cache read dominate
-    kv_b = 1.03 if getattr(cfg, "kv_cache_dtype", "model") == "int8" else dt
+    return decode_byte_terms(cfg, cell, chips)["total"]
+
+
+def decode_byte_terms(cfg, cell, chips: int = 1) -> dict:
+    """Per-chip HBM bytes of ONE decode step, split into the roofline's
+    byte terms: {"weights", "kv", "act", "total"}.
+
+    This is the combined-quantization model the quantized bench asserts
+    against: `cfg.weight_dtype="int8"` reprices the projection-weight stream
+    at ~1.06 B/param (embedding share stays full width, matching
+    layers.quantize_weights), and `cfg.kv_cache_dtype="int8"` reprices the
+    KV-cache read at 1 + 4/hd B/element (per-(token, head) f32 scales,
+    core.quant.quantize_kv).  The two compose: the decode step's two
+    dominant byte terms both stream packed.
+    """
+    d, hd = cfg.d_model, cfg.hd
+    kv, L = cfg.n_kv, cfg.n_layers
+    dt = 2.0  # bf16
+    weights = _serve_weight_bytes(cfg, chips)
+    unit, layers = _act_unit(cfg)
+
+    kv_b = (kv_int8_bytes(hd)
+            if getattr(cfg, "kv_cache_dtype", "model") == "int8" else dt)
     cache = L * cell.global_batch * cell.seq_len * 2 * kv * hd * kv_b / chips
     if cfg.family == "rwkv":
         nh = d // cfg.rwkv.head_dim
@@ -214,7 +257,8 @@ def analytic_hbm_bytes(cfg, cell, chips: int, microbatches: int = 1,
             + n_occ * cell.global_batch * cell.seq_len * 2 * kv * hd * dt
         ) / chips
     act = layers * cell.global_batch * unit * dt / chips
-    return p_local_serve + cache + act
+    return {"weights": weights, "kv": cache, "act": act,
+            "total": weights + cache + act}
 
 
 @dataclasses.dataclass

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import argparse
 import collections
+import dataclasses
 import time
 from typing import Optional, Sequence
 
@@ -51,7 +52,7 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
           scheduler: str = "continuous",
           gen_lens: Optional[Sequence[int]] = None,
           prompts: Optional[Sequence[np.ndarray]] = None,
-          quantize: str = "none"):
+          quantize: str = "none", kv_cache: str = "model"):
     """Serve `requests` synthetic prompts through greedy decode.
 
     quantize="int8" packs every projection weight with block-scaled int8
@@ -59,6 +60,13 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
     path — one broadcast-weight bgemv over every weight matrix per token —
     streams 1 byte/weight instead of 2-4, with in-kernel dequantization
     under the pallas backend and packed host matvecs under xla.
+
+    kv_cache="int8" packs the OTHER large decode byte term the same way:
+    the KV cache stores block-scaled int8 (one f32 scale per (token, head),
+    core.quant.quantize_kv), written in lockstep with the values and — under
+    the pallas backend — streamed packed through the int8-KV flash attention
+    kernel with in-kernel dequantization.  Composing both flags runs the
+    fully-quantized decode byte path: weights AND KV at ~1 byte/element.
 
     gen_lens: optional per-request generation budgets (defaults to `gen` for
     every request) — the mixed-length distribution is where continuous
@@ -102,6 +110,10 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
         raise ValueError(f"{len(gen_lens)} gen_lens for {n} requests")
     if quantize not in ("none", "int8"):
         raise ValueError(f"quantize must be 'none' or 'int8', got {quantize!r}")
+    if kv_cache not in ("model", "int8"):
+        raise ValueError(f"kv_cache must be 'model' or 'int8', got {kv_cache!r}")
+    if kv_cache == "int8":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
     with blas.use_backend(backend):
         if scheduler == "continuous":
             if cfg.family not in tf.SLOT_CACHE_FAMILIES:
@@ -376,10 +388,15 @@ def main():
     ap.add_argument("--quantize", default="none", choices=("none", "int8"),
                     help="int8: block-scaled packed serving weights — the "
                          "bandwidth-bound decode path streams 1 byte/weight")
+    ap.add_argument("--kv-cache", default="model", choices=("model", "int8"),
+                    help="int8: block-scaled packed KV cache — attention "
+                         "streams ~1 byte/element of K/V (combine with "
+                         "--quantize int8 for the fully-quantized decode "
+                         "byte path)")
     args = ap.parse_args()
     serve(args.arch, args.variant, args.requests, args.batch, args.prompt_len,
           args.gen, backend=args.backend, scheduler=args.scheduler,
-          quantize=args.quantize)
+          quantize=args.quantize, kv_cache=args.kv_cache)
 
 
 if __name__ == "__main__":

@@ -322,6 +322,66 @@ def _cache_write(buf: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray) -> jnp.nd
     )(buf, new, pos)
 
 
+def _cache_write_kv(bufs: tuple, qt: "quant.QuantizedTensor", pos: jnp.ndarray) -> tuple:
+    """Scatter a freshly quantized KV block — packed int8 values AND their
+    per-(token, head) scales — into the cache in lockstep.
+
+    `bufs` is (values_buf (B, S, H, hd) int8, scales_buf (B, S, H, 1)); `qt`
+    is `quant.quantize_kv`'s output for the new (B, T, H, hd) block.  One
+    vmapped scatter writes both leaves at the same ragged per-slot offsets,
+    so a value row can never land without its scale (the invariant the
+    dequant/flash read paths rely on).
+    """
+    vbuf, sbuf = bufs
+    new = (qt.values.astype(vbuf.dtype), qt.scales.astype(sbuf.dtype))
+    if pos.ndim == 0:
+        return tuple(
+            jax.lax.dynamic_update_slice(b, n, (0, pos) + (0,) * (b.ndim - 2))
+            for b, n in zip(bufs, new)
+        )
+    write = jax.vmap(
+        lambda bv, bs, nv, ns, p: (
+            jax.lax.dynamic_update_slice(bv, nv, (p,) + (0,) * (bv.ndim - 1)),
+            jax.lax.dynamic_update_slice(bs, ns, (p,) + (0,) * (bs.ndim - 1)),
+        )
+    )
+    return write(vbuf, sbuf, *new, pos)
+
+
+def _packed_flash_eligible(cfg: "AttnConfig", prefix_len) -> bool:
+    """The int8-KV flash path covers standard causal attention (the dense/
+    moe decode families); prefix-LM masks (vlm prefill) and non-causal
+    layers fall back to the exact-dequant attention_core path."""
+    return (blas.get_backend() == "pallas" and cfg.causal
+            and prefix_len is None and not cfg.full_scores)
+
+
+def _packed_flash_attention(q, kv, ks, vv, vs, pos, t: int, groups: int):
+    """Attention over the PACKED int8 KV cache via the flash Pallas kernel.
+
+    q (B, T, H, hd); kv/vv (B, S, KVH, hd) int8 values with ks/vs
+    (B, S, KVH, 1) per-(token, head) scales; pos is the pre-write cache
+    position (scalar, or (B,) for the continuous-batching ragged slot grid).
+    Everything streams in the cache's NATIVE layout — the kernel's 4-D
+    BlockSpecs decompose the grid row into (slot, head), so no transposed
+    copy of the cache is ever materialized between the scatter and the
+    launch.  The kernel reads 1 byte/element of K/V (plus the scale rows),
+    dequantizes in-kernel against the f32 softmax accumulator, folds GQA
+    head sharing into its index map, and masks per-row real lengths — one
+    launch, ~half the attention bytes of the bf16 cache read.
+    """
+    b, tq, h, hd = q.shape
+    # per-row real KV length AFTER the write: scalar pos broadcasts, a (B,)
+    # per-slot vector expands over that slot's query heads
+    lens = jnp.broadcast_to(
+        (jnp.asarray(pos, jnp.int32) + t).reshape(-1, 1), (b, h)
+    ).reshape(b * h)
+    from repro.kernels import ops
+    out = ops.flash_attention(q, kv, vv, k_scales=ks, v_scales=vs,
+                              kv_lens=lens, kv_groups=groups, causal=True)
+    return out.astype(q.dtype)
+
+
 def attention_layer(
     params: dict,
     x: jnp.ndarray,  # (B, T, d)
@@ -361,25 +421,29 @@ def attention_layer(
         k = rope(k, positions, cfg.rope_theta)
 
     new_cache = None
+    groups = h // kv
+    out = None
     if cache is not None:
         pos = cache["pos"]
         if cache["k"].dtype == jnp.int8:
-            # int8 KV cache: symmetric per-(token, head) quantization.
-            # Halves the decode-cell HBM/memory roofline term (§Perf).
-            def quant(z):
-                scale = jnp.max(jnp.abs(z.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
-                q = jnp.round(z.astype(jnp.float32) / jnp.maximum(scale, 1e-9))
-                return jnp.clip(q, -127, 127).astype(jnp.int8), scale.astype(jnp.bfloat16)
-
-            kq, ks_ = quant(k)
-            vq, vs_ = quant(v)
-            ck = _cache_write(cache["k"], kq, pos)
-            cv = _cache_write(cache["v"], vq, pos)
-            cks = _cache_write(cache["k_scale"], ks_, pos)
-            cvs = _cache_write(cache["v_scale"], vs_, pos)
+            # int8 KV cache: block-scaled packed storage (core.quant
+            # per-(token, head) scales), values + scales scattered in
+            # lockstep.  Halves the decode-cell attention byte term (§Perf).
+            kq, vq = quant.quantize_kv(k), quant.quantize_kv(v)
+            ck, cks = _cache_write_kv((cache["k"], cache["k_scale"]), kq, pos)
+            cv, cvs = _cache_write_kv((cache["v"], cache["v_scale"]), vq, pos)
             new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs, "pos": pos + t}
-            k_full = (ck.astype(jnp.float32) * cks.astype(jnp.float32)).astype(x.dtype)
-            v_full = (cv.astype(jnp.float32) * cvs.astype(jnp.float32)).astype(x.dtype)
+            if _packed_flash_eligible(cfg, prefix_len):
+                # pallas: the flash kernel streams the PACKED int8 tiles and
+                # dequantizes in-kernel — the cache is never expanded to
+                # full precision in HBM, and GQA head sharing happens in the
+                # kernel's index map (no repeat_kv materialization)
+                out = _packed_flash_attention(q, ck, cks, cv, cvs, pos, t,
+                                              groups)
+            else:
+                # xla/ref: exact dequantization oracle semantics
+                k_full = quant.dequantize_kv(ck, cks, x.dtype)
+                v_full = quant.dequantize_kv(cv, cvs, x.dtype)
         else:
             ck = _cache_write(cache["k"], k.astype(cache["k"].dtype), pos)
             cv = _cache_write(cache["v"], v.astype(cache["v"].dtype), pos)
@@ -390,14 +454,12 @@ def attention_layer(
         k_full, v_full = k, v
         q_offset = None
 
-    groups = h // kv
-    k_full = repeat_kv(k_full, groups)
-    v_full = repeat_kv(v_full, groups)
-    out = attention_core(
-        q, k_full, v_full,
-        causal=cfg.causal, prefix_len=prefix_len, q_offset=q_offset,
-        full_scores=cfg.full_scores,
-    )
+    if out is None:
+        out = attention_core(
+            q, repeat_kv(k_full, groups), repeat_kv(v_full, groups),
+            causal=cfg.causal, prefix_len=prefix_len, q_offset=q_offset,
+            full_scores=cfg.full_scores,
+        )
     # residual (the block's skip connection) fuses into the output
     # projection's flush: attn-out + residual is one HBM write
     out = blas.matmul_fused(

@@ -494,11 +494,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_frames: int = 0,
     pos0 = jnp.zeros((batch,), jnp.int32) if per_slot else jnp.zeros((), jnp.int32)
     if cfg.family in ("dense", "moe", "vlm"):
         if cfg.kv_cache_dtype == "int8":
+            # block-scaled packed KV storage (core.quant.quantize_kv):
+            # int8 values + one f32 scale per (token, head), written in
+            # lockstep and streamed packed by the int8-KV flash kernel under
+            # the pallas backend (dequantization-oracle read under xla/ref).
+            # Scales stay f32 so the elementwise s/2 quantization bound is
+            # exact; the byte overhead is 4/hd per element (~6% at hd=64).
             return {
                 "k": jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), jnp.int8),
                 "v": jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), jnp.int8),
-                "k_scale": jnp.zeros((cfg.n_layers, batch, max_len, kv, 1), jnp.bfloat16),
-                "v_scale": jnp.zeros((cfg.n_layers, batch, max_len, kv, 1), jnp.bfloat16),
+                "k_scale": jnp.zeros((cfg.n_layers, batch, max_len, kv, 1), jnp.float32),
+                "v_scale": jnp.zeros((cfg.n_layers, batch, max_len, kv, 1), jnp.float32),
                 "pos": pos0,
             }
         return {

@@ -168,6 +168,194 @@ def test_flash_attention_block_invariance():
 
 
 # --------------------------------------------------------------------------
+# Int8-KV flash attention (packed tiles, in-kernel dequant, GQA index map)
+# --------------------------------------------------------------------------
+
+def _packed_kv(key, bh, tk, d):
+    from repro.core import quant
+    kk, kv_ = jax.random.split(key)
+    k = jax.random.normal(kk, (bh, tk, d), F32)
+    v = jax.random.normal(kv_, (bh, tk, d), F32)
+    kq, vq = quant.quantize_kv(k), quant.quantize_kv(v)
+    return k, v, kq.values, kq.scales, vq.values, vq.scales
+
+
+@pytest.mark.parametrize("tq,tk,d,causal", [
+    (128, 128, 64, True),
+    (1, 256, 64, True),     # single-token decode
+    (100, 100, 32, True),
+    (60, 200, 32, True),    # ragged lengths: padded keys stay masked
+    (64, 128, 64, False),
+])
+def test_flash_attention_int8_kv_matches_dequant_oracle(tq, tk, d, causal):
+    """The in-kernel dequant is the SAME math as the exact dequantization
+    oracle (values * per-(token, head) scale), so the packed kernel must
+    match ref.attention_kv_dequant to float tolerance on every shape."""
+    ks = jax.random.split(jax.random.PRNGKey(tq * 131 + tk), 2)
+    q = jax.random.normal(ks[0], (3, tq, d), F32)
+    _, _, k8, ksc, v8, vsc = _packed_kv(ks[1], 3, tk, d)
+    out = ops.flash_attention(q, k8, v8, k_scales=ksc, v_scales=vsc,
+                              causal=causal, block_q=64, block_k=64)
+    want = ref.attention_kv_dequant(q, k8, ksc, v8, vsc, causal=causal)
+    _cmp(out, want, F32)
+
+
+def test_flash_attention_int8_kv_within_analytic_bound():
+    """vs the FULL-PRECISION oracle the packed kernel's error must stay
+    inside core.quant.attention_error_bound — the documented accuracy
+    contract of the int8 KV cache."""
+    from repro.core import quant
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    q = jax.random.normal(ks[0], (4, 32, 64), F32)
+    k, v, k8, ksc, v8, vsc = _packed_kv(ks[1], 4, 128, 64)
+    out = ops.flash_attention(q, k8, v8, k_scales=ksc, v_scales=vsc,
+                              causal=True, block_q=32, block_k=64)
+    want = ref.attention(q, k, v, causal=True)
+    v_hat = v8.astype(F32) * vsc
+    bound = np.asarray(quant.attention_error_bound(q, ksc, v_hat, vsc))
+    err = np.abs(np.asarray(out) - np.asarray(want, np.float32))
+    assert (err <= bound + 1e-5).all(), (err.max(), bound.min())
+    assert err.max() > 0  # the bound is not trivially satisfied by equality
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_flash_attention_gqa_groups_share_kv(quantized):
+    """kv_groups folds GQA head sharing into the kernel index map: the
+    result equals attention over the repeat_kv-expanded cache, without the
+    kernel ever seeing an expanded operand."""
+    B, H, KV, tk, d = 2, 6, 2, 96, 32
+    g = H // KV
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    q = jax.random.normal(ks[0], (B * H, 16, d), F32)
+    k, v, k8, ksc, v8, vsc = _packed_kv(ks[1], B * KV, tk, d)
+    if quantized:
+        out = ops.flash_attention(q, k8, v8, k_scales=ksc, v_scales=vsc,
+                                  kv_groups=g, causal=True, block_k=64)
+        want = ref.attention_kv_dequant(q, k8, ksc, v8, vsc, causal=True)
+    else:
+        out = ops.flash_attention(q, k, v, kv_groups=g, causal=True, block_k=64)
+        want = ref.attention(q, jnp.repeat(k, g, axis=0),
+                             jnp.repeat(v, g, axis=0), causal=True)
+    _cmp(out, want, F32)
+
+
+def test_flash_attention_cache_layout_gqa_lens():
+    """The 4-D cache-layout path (no moveaxis/reshape of the cache) with
+    GQA groups AND per-slot lens — the exact decode configuration
+    layers._packed_flash_attention launches — must match the flat-layout
+    dequant oracle.  Guards the (r % h) // g head decomposition in the 4-D
+    index maps, which no MHA serve config exercises."""
+    from repro.core import quant
+    B, H, KV, Tq, S, d = 2, 6, 2, 1, 100, 32
+    g = H // KV
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    q4 = jax.random.normal(ks[0], (B, Tq, H, d), F32)
+    k4 = jax.random.normal(ks[1], (B, S, KV, d), F32)
+    v4 = jax.random.normal(ks[2], (B, S, KV, d), F32)
+    kq, vq = quant.quantize_kv(k4), quant.quantize_kv(v4)
+    lens = jnp.repeat(jnp.asarray([37, 100], jnp.int32), H)  # per-slot
+    out = ops.flash_attention(q4, kq.values, vq.values, k_scales=kq.scales,
+                              v_scales=vq.scales, kv_lens=lens, kv_groups=g,
+                              causal=True, block_k=64)
+    assert out.shape == (B, Tq, H, d)
+    flat = lambda z: jnp.moveaxis(z, 2, 1).reshape(z.shape[0] * z.shape[2],
+                                                   z.shape[1], z.shape[3])
+    want = ref.attention_kv_dequant(
+        flat(q4), flat(kq.values), flat(kq.scales), flat(vq.values),
+        flat(vq.scales), kv_lens=lens, causal=True)
+    _cmp(flat(out), want, F32)
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_flash_attention_per_row_kv_lens(quantized):
+    """kv_lens makes the real KV length (and the causal offset) a per-grid-
+    row value — the continuous-batching ragged slot grid in one launch.
+    Lengths cover a first block, a ragged middle, the full range and a
+    single visible key."""
+    bh, tq, tk, d = 6, 1, 160, 32
+    ks = jax.random.split(jax.random.PRNGKey(13), 2)
+    q = jax.random.normal(ks[0], (bh, tq, d), F32)
+    k, v, k8, ksc, v8, vsc = _packed_kv(ks[1], bh, tk, d)
+    lens = jnp.asarray([5, 37, 64, 160, 1, 97], jnp.int32)
+    if quantized:
+        out = ops.flash_attention(q, k8, v8, k_scales=ksc, v_scales=vsc,
+                                  kv_lens=lens, causal=True, block_k=64)
+        want = ref.attention_kv_dequant(q, k8, ksc, v8, vsc, kv_lens=lens,
+                                        causal=True)
+    else:
+        out = ops.flash_attention(q, k, v, kv_lens=lens, causal=True, block_k=64)
+        want = ref.attention_lens(q, k, v, lens, causal=True)
+    assert np.isfinite(np.asarray(out)).all()
+    _cmp(out, want, F32)
+
+
+# --------------------------------------------------------------------------
+# Ragged (prime-size) batched shapes: in-kernel masked tails, no ops padding
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pallas", "xla", "ref"])
+@pytest.mark.parametrize("batch,m,n", [(3, 257, 131), (2, 13, 89), (3, 101, 640)])
+def test_bgemv_prime_sizes(backend, batch, m, n):
+    """Regression: bgemv used to rely on ops-side padding; the kernel now
+    masks the ragged contraction fringe in-kernel (cdiv grid) and Pallas
+    clips the ragged output rows — every backend agrees on prime shapes."""
+    from repro.core import blas
+    ka, kb = jax.random.split(jax.random.PRNGKey(batch * m + n), 2)
+    a = jax.random.normal(ka, (batch, m, n), F32)
+    x = jax.random.normal(kb, (batch, n), F32)
+    with blas.use_backend(backend):
+        y = blas.batched_gemv(a, x)
+    _cmp(y, ref.bgemv(a, x), F32)
+    # broadcast weights (the serving case) hit the same masked path
+    with blas.use_backend(backend):
+        yb = blas.batched_gemv(a[0], x)
+    _cmp(yb, ref.bgemv(a[0], x), F32)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "xla", "ref"])
+@pytest.mark.parametrize("batch,m,n,k", [(3, 257, 131, 89), (2, 19, 67, 257)])
+def test_bgemm_prime_sizes(backend, batch, m, n, k):
+    from repro.core import blas
+    ka, kb = jax.random.split(jax.random.PRNGKey(batch + m + n + k), 2)
+    a = jax.random.normal(ka, (batch, m, k), F32)
+    b = jax.random.normal(kb, (batch, k, n), F32)
+    with blas.use_backend(backend):
+        y = blas.batched_gemm(a, b)
+    _cmp(y, ref.bgemm(a, b), F32)
+    with blas.use_backend(backend):
+        yb = blas.batched_gemm(a, b[0])
+    _cmp(yb, ref.bgemm(a, b[0]), F32)
+
+
+def test_bgemv_transpose_prime_sizes():
+    """The decode projection layout (transpose_a streams W in HBM order)
+    masks its swapped contraction axis too."""
+    n, m, batch = 131, 257, 3
+    ka, kb = jax.random.split(jax.random.PRNGKey(21), 2)
+    a = jax.random.normal(ka, (n, m), F32)
+    x = jax.random.normal(kb, (batch, n), F32)
+    y = ops.bgemv(a, x, transpose_a=True)
+    want = jnp.einsum("nm,bn->bm", a, x)
+    _cmp(y, want, F32)
+
+
+def test_bgemm_fused_epilogue_prime_sizes():
+    """Ragged fringes must not leak through the fused epilogue either: the
+    masked accumulator feeds bias/activation/gate/residual untouched."""
+    batch, m, n, k = 2, 19, 131, 89
+    ks = jax.random.split(jax.random.PRNGKey(23), 5)
+    a = jax.random.normal(ks[0], (batch, m, k), F32)
+    b = jax.random.normal(ks[1], (k, n), F32)
+    b2 = jax.random.normal(ks[2], (k, n), F32)
+    bias = jax.random.normal(ks[3], (n,), F32)
+    res = jax.random.normal(ks[4], (batch, m, n), F32)
+    out = ops.bgemm(a, b, b2=b2, bias=bias, residual=res, activation="silu")
+    h = jnp.einsum("bmk,kn->bmn", a, b) + bias
+    want = jax.nn.silu(h) * jnp.einsum("bmk,kn->bmn", a, b2) + res
+    _cmp(out, want, F32)
+
+
+# --------------------------------------------------------------------------
 # RWKV6 / Mamba2 scans
 # --------------------------------------------------------------------------
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import blas, quant, tiling
 from repro.kernels import ops
@@ -81,6 +82,46 @@ def test_quantized_tensor_is_a_pytree():
     # jit boundary: passes through as an argument with static aux
     out = jax.jit(lambda q: q.dequantize())(qt)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(qt.dequantize()))
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    m=st.integers(min_value=1, max_value=96),
+    n=st.integers(min_value=1, max_value=160),
+    block_m=st.integers(min_value=1, max_value=64),
+    block_n=st.integers(min_value=1, max_value=96),
+    bf16=st.integers(min_value=0, max_value=1),
+    transpose=st.integers(min_value=0, max_value=1),
+)
+def test_roundtrip_matvec_within_bound_property(m, n, block_m, block_n, bf16,
+                                                transpose):
+    """Property sweep: for ANY shape/block/dtype/layout, the quantize ->
+    dequantize round trip applied as a matvec stays within the documented
+    `matvec_error_bound` of the f32 product.  This is the bound every
+    backend's exact-dequant path inherits, so it must hold unconditionally —
+    including degenerate 1-sized dims, non-divisible blocks (shrunk to
+    divisors) and transposed (output-major) storage."""
+    dtype = jnp.bfloat16 if bf16 else jnp.float32
+    w = _rand((m, n), dtype, key=jax.random.PRNGKey(m * 1000 + n))
+    spec = quant.QuantSpec(block_m=block_m, block_n=block_n,
+                           transpose=bool(transpose))
+    qt = quant.quantize(w, spec)
+    # the bound runs over STORED rows: feed x along the stored column axis
+    x = _rand((qt.values.shape[-1],), jnp.float32, key=jax.random.PRNGKey(n))
+    w_stored = np.asarray(w, np.float32).T if transpose else np.asarray(w, np.float32)
+    deq_stored = np.asarray(qt.dequantize())
+    if transpose:
+        deq_stored = deq_stored.T
+    y_q = deq_stored @ np.asarray(x)
+    y_f = w_stored @ np.asarray(x)
+    bound = np.asarray(quant.matvec_error_bound(qt, x))
+    # bf16 operands add the oracle's own representation error on top of the
+    # quantization bound
+    slack = 1e-5 if dtype == jnp.float32 else 0.05 * (1 + np.abs(y_f).max())
+    assert (np.abs(y_q - y_f) <= bound + slack).all(), (
+        (m, n, qt.block, bool(transpose), dtype),
+        np.abs(y_q - y_f).max(), bound.min(),
+    )
 
 
 # --------------------------------------------------------------------------
@@ -407,6 +448,106 @@ def test_roofline_models_packed_weight_bytes():
     tr = ShapeCell("train_small", 256, 8, "train")
     assert roofline.analytic_hbm_bytes(cfg, tr, 1) == roofline.analytic_hbm_bytes(
         dataclasses.replace(cfg, weight_dtype="int8"), tr, 1)
+
+
+# --------------------------------------------------------------------------
+# KV-cache quantization frame (per-(token, head) block scales)
+# --------------------------------------------------------------------------
+
+def test_quantize_kv_shapes_and_elementwise_bound():
+    """quantize_kv is the QuantizedTensor frame at block (1, hd): one scale
+    per (token, head), leading (B, T) dims free, round trip within s/2."""
+    x = _rand((2, 5, 3, 16), key=jax.random.PRNGKey(3))
+    qt = quant.quantize_kv(x)
+    assert qt.values.shape == (2, 5, 3, 16) and qt.values.dtype == jnp.int8
+    assert qt.scales.shape == (2, 5, 3, 1) and qt.scales.dtype == jnp.float32
+    assert qt.block == (1, 16)
+    err = np.abs(np.asarray(qt.dequantize()) - np.asarray(x, np.float32))
+    assert (err <= np.asarray(qt.elementwise_bound()) + 1e-6).all()
+    # dequantize_kv is the same math on the raw cache leaves
+    np.testing.assert_array_equal(
+        np.asarray(quant.dequantize_kv(qt.values, qt.scales)),
+        np.asarray(qt.dequantize()),
+    )
+
+
+def test_kv_traffic_ratio_structural():
+    # bf16 -> int8 + one f32 scale per hd elements: ~1.9x at hd=64
+    assert quant.kv_traffic_ratio(64) > 1.85
+    assert quant.kv_traffic_ratio(128) > 1.9
+    assert quant.kv_traffic_ratio(64, full_bytes_per_elem=4) > 3.7
+    assert quant.packed_kv_bytes(100, 4, 64) == 100 * 4 * 68
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    t=st.integers(min_value=1, max_value=48),
+    h=st.integers(min_value=1, max_value=4),
+    hd=st.integers(min_value=4, max_value=64),
+)
+def test_quantize_kv_roundtrip_property(t, h, hd):
+    x = _rand((t, h, hd), key=jax.random.PRNGKey(t * 7 + h * 3 + hd))
+    qt = quant.quantize_kv(x)
+    err = np.abs(np.asarray(qt.dequantize()) - np.asarray(x, np.float32))
+    scales = np.asarray(qt.scales)                   # (t, h, 1)
+    assert (err <= np.broadcast_to(scales / 2, x.shape) + 1e-6).all()
+
+
+def test_attention_error_bound_is_rigorous_and_finite():
+    """The derived softmax-perturbation bound must hold for the exact
+    dequant attention vs full precision, and must not be vacuous."""
+    from repro.kernels import ref
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = _rand((4, 8, 32), key=ks[0])
+    k = _rand((2, 64, 32), key=ks[1])   # GQA: 2 stored heads, 4 query rows
+    v = _rand((2, 64, 32), key=ks[2])
+    kq, vq = quant.quantize_kv(k), quant.quantize_kv(v)
+    got = ref.attention_kv_dequant(q, kq.values, kq.scales, vq.values,
+                                   vq.scales, causal=True)
+    want = ref.attention(q, jnp.repeat(k, 2, axis=0),
+                         jnp.repeat(v, 2, axis=0), causal=True)
+    bound = np.asarray(quant.attention_error_bound(
+        q, kq.scales, vq.values.astype(jnp.float32) * vq.scales, vq.scales))
+    err = np.abs(np.asarray(got) - np.asarray(want, np.float32))
+    assert (err <= bound + 1e-5).all(), (err.max(), bound.min())
+    assert np.isfinite(bound).all() and (bound > 0).all()
+
+
+# --------------------------------------------------------------------------
+# roofline: the combined weights+KV decode byte model (the measured cell)
+# --------------------------------------------------------------------------
+
+def test_decode_byte_terms_combined_composition():
+    """Composing weight_dtype=int8 with kv_cache_dtype=int8 must shrink
+    EXACTLY the two modeled byte terms it claims — weights at the PR 4
+    packed width, KV at 1 + 4/hd B/elem — and their combined total on a
+    long-context cell by >= 1.5x vs weights-only (the ISSUE 5 gate)."""
+    import dataclasses
+    from repro.configs.base import ShapeCell
+    from repro.launch import roofline
+    from repro.models.registry import get_config
+    cfg = get_config("stablelm-1.6b", "full")
+    cell = ShapeCell("decode_long", 8192, 64, "decode")
+    full = roofline.decode_byte_terms(cfg, cell)
+    w_only = roofline.decode_byte_terms(
+        dataclasses.replace(cfg, weight_dtype="int8"), cell)
+    both = roofline.decode_byte_terms(
+        dataclasses.replace(cfg, weight_dtype="int8", kv_cache_dtype="int8"),
+        cell)
+    # weights term: repriced once, identical whether KV packs or not
+    assert both["weights"] == w_only["weights"] < full["weights"]
+    # KV term: repriced by exactly the packed ratio, orthogonal to weights
+    assert w_only["kv"] == full["kv"]
+    want_kv = full["kv"] * roofline.kv_int8_bytes(cfg.hd) / 2.0
+    assert abs(both["kv"] - want_kv) < 1e-6 * full["kv"]
+    # activations untouched; totals are the sum of their parts
+    assert both["act"] == full["act"]
+    for terms in (full, w_only, both):
+        assert abs(terms["total"]
+                   - (terms["weights"] + terms["kv"] + terms["act"])) < 1.0
+    assert w_only["total"] / both["total"] >= 1.5
+    # analytic_hbm_bytes and the terms helper agree (single source of truth)
+    assert roofline.analytic_hbm_bytes(cfg, cell, 1) == full["total"]
 
 
 # --------------------------------------------------------------------------

@@ -33,10 +33,21 @@ def _prompts(n, prompt_len, vocab, seed=0):
     return [rng.integers(3, vocab, size=(prompt_len,), dtype=np.int32) for _ in range(n)]
 
 
-def _sequential_oracle(prompts, gen_lens, seed=0, eos=NO_EOS, quantize="none"):
+def _sequential_oracle(prompts, gen_lens, seed=0, eos=NO_EOS, quantize="none",
+                       kv_cache="model", backend="xla", arch=ARCH):
     """Per-request decode through the ORIGINAL scalar-pos machinery: batch 1,
     one request at a time, same cache capacity as the schedulers use."""
-    cfg = get_config(ARCH, "smoke")
+    import contextlib
+    import dataclasses
+    cfg = get_config(arch, "smoke")
+    if kv_cache == "int8":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    ctx = blas.use_backend(backend) if backend != "xla" else contextlib.nullcontext()
+    with ctx:
+        return _run_oracle(cfg, prompts, gen_lens, seed, eos, quantize)
+
+
+def _run_oracle(cfg, prompts, gen_lens, seed, eos, quantize):
     params = tf.init_params(jax.random.PRNGKey(seed), cfg)
     if quantize == "int8":
         from repro.models import layers
@@ -160,6 +171,74 @@ def test_quantized_greedy_close_to_full_precision():
     toks_packed = [t for o in packed["outputs"] for t in o]
     agree = sum(a == b for a, b in zip(toks_full, toks_packed))
     assert agree / len(toks_full) >= 0.5, (toks_full, toks_packed)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("scheduler", ["continuous", "batch"])
+def test_combined_quantized_decode_matches_oracle(scheduler, backend):
+    """The fully-quantized decode byte path: int8 weights AND the block-
+    scaled int8 KV cache together.  Greedy tokens must be EXACTLY the
+    per-request sequential oracle's on the SAME backend — under pallas that
+    is end-to-end through the int8-KV flash kernel and packed bgemv, so
+    scheduling, slot grafts, per-slot kv_lens and the packed KV scatter
+    change bytes moved, never the math."""
+    cfg = get_config(ARCH, "smoke")
+    gen_lens = [3, 7, 4, 6]
+    prompts = _prompts(4, 8, cfg.vocab, seed=29)
+    stats = serve(ARCH, "smoke", batch=2, gen_lens=gen_lens, eos=NO_EOS,
+                  verbose=False, scheduler=scheduler, prompts=prompts,
+                  quantize="int8", kv_cache="int8", backend=backend)
+    assert stats["completed"] == 4
+    want = _sequential_oracle(prompts, gen_lens, quantize="int8",
+                              kv_cache="int8", backend=backend)
+    assert stats["outputs"] == want
+
+
+def test_combined_quantized_pallas_streams_packed_kv(monkeypatch):
+    """Under the pallas backend with the int8 KV cache, every decode-step
+    attention must route through the int8-KV flash kernel with PACKED
+    operands (int8 values + per-(token, head) scales) — never a
+    dequantized cache — while the projections stay packed bgemv."""
+    from repro.kernels import ops
+
+    flash_calls = []
+    real_flash = ops.flash_attention
+
+    def spy(q, k, v, **kw):
+        flash_calls.append((k.dtype, kw.get("k_scales") is not None,
+                            kw.get("kv_lens") is not None, kw.get("kv_groups")))
+        return real_flash(q, k, v, **kw)
+
+    monkeypatch.setattr(ops, "flash_attention", spy)
+    stats = serve(ARCH, "smoke", requests=2, batch=2, prompt_len=4,
+                  gen_lens=[2, 2], eos=NO_EOS, verbose=False,
+                  backend="pallas", scheduler="continuous",
+                  quantize="int8", kv_cache="int8")
+    assert stats["completed"] == 2
+    assert flash_calls, "int8-KV serve never hit the packed flash kernel"
+    assert all(dt == jnp.int8 for dt, _, _, _ in flash_calls)  # packed tiles
+    assert all(scaled for _, scaled, _, _ in flash_calls)
+    assert all(lens for _, _, lens, _ in flash_calls)          # per-slot lens
+
+
+def test_combined_quantized_gqa_arch_matches_oracle():
+    """GQA end to end: internlm2-20b's smoke config has n_kv < n_heads, so
+    under pallas the int8-KV flash kernel runs with kv_groups > 1 through
+    its 4-D cache-layout index maps — greedy tokens must still match the
+    per-request sequential oracle exactly."""
+    cfg = get_config("internlm2-20b", "smoke")
+    assert cfg.n_kv < cfg.n_heads  # the point of this test
+    gen_lens = [3, 5, 4]
+    prompts = _prompts(3, 8, cfg.vocab, seed=31)
+    stats = serve("internlm2-20b", "smoke", batch=2, gen_lens=gen_lens,
+                  eos=NO_EOS, verbose=False, scheduler="continuous",
+                  prompts=prompts, quantize="int8", kv_cache="int8",
+                  backend="pallas")
+    assert stats["completed"] == 3
+    want = _sequential_oracle(prompts, gen_lens, quantize="int8",
+                              kv_cache="int8", backend="pallas",
+                              arch="internlm2-20b")
+    assert stats["outputs"] == want
 
 
 def test_quantized_decode_routes_through_packed_bgemv(monkeypatch):
