@@ -53,6 +53,74 @@ def rows(arch: str = "stablelm-1.6b", variant: str = "smoke", requests: int = 24
         f"ttft_p95={np.percentile(np.asarray(c['ttft']), 95):.2f}s"
         f"_vs_{np.percentile(np.asarray(b['ttft']), 95):.2f}s",
     ))
+    out.extend(mixed_traffic_rows(arch, variant, seed=seed, backend=backend))
+    return out
+
+
+def mixed_traffic_rows(arch: str = "stablelm-1.6b", variant: str = "smoke",
+                       batch: int = 3, long_prompt: int = 192, chunk: int = 32,
+                       seed: int = 0, backend: str = "xla"):
+    """Head-of-line blocking under mixed traffic: short interactive requests
+    are decoding when one long-prompt request arrives.  Unchunked, the
+    admission prefill processes the whole prompt between two decode steps of
+    the live slots (worst inter-token stall = `long_prompt` prefill tokens);
+    chunked, the same admission interleaves decode rounds at every chunk
+    boundary (worst stall = `chunk` tokens).  Greedy tokens are asserted
+    identical, so the delta is pure scheduling.
+
+    `stall_tokens` (prefill tokens processed between two consecutive decode
+    steps while live slots exist) is the deterministic form of the stall —
+    wall-clock `max_stall_ms` is also reported but includes jit-trace noise
+    on first-seen prefill shapes.
+    """
+    rng = np.random.default_rng(seed)
+    vocab_lo, vocab_hi = 3, 256
+    short = 8
+
+    def _prompt(n):
+        return rng.integers(vocab_lo, vocab_hi, size=(n,), dtype=np.int32)
+
+    # 3 short requests fill the grid; rid 0 finishes early and frees a slot
+    # for the long-prompt admission while rids 1-2 are still decoding; two
+    # short tails keep the grid busy after the long request drains.
+    prompts = [_prompt(short), _prompt(short), _prompt(short),
+               _prompt(long_prompt), _prompt(short), _prompt(short)]
+    gen_lens = [4, 48, 48, 4, 8, 8]
+
+    results = {}
+    out = []
+    for mode, pchunk in (("unchunked", None), ("chunked", chunk)):
+        stats = serve(arch, variant, batch=batch, prompts=prompts,
+                      gen_lens=gen_lens, seed=seed, eos=-1, verbose=False,
+                      backend=backend, scheduler="continuous",
+                      prefill_chunk=pchunk)
+        results[mode] = stats
+        ttft = np.asarray(stats["ttft"])
+        out.append((
+            f"serve_mixed_{mode}_b{batch}_p{long_prompt}",
+            round(stats["tok_s"], 1),
+            f"tokens={stats['tokens']};decode_steps={stats['decode_steps']};"
+            f"ttft_p50={np.percentile(ttft, 50):.2f}s;"
+            f"ttft_p95={np.percentile(ttft, 95):.2f}s;"
+            f"max_stall_ms={stats['max_stall_ms']:.1f};"
+            f"stall_tokens={stats['max_stall_prefill_tokens']}",
+        ))
+    ch, un = results["chunked"], results["unchunked"]
+    assert ch["outputs"] == un["outputs"], \
+        "chunked admission must generate bit-identical greedy tokens"
+    assert ch["max_stall_prefill_tokens"] < un["max_stall_prefill_tokens"], \
+        (ch["max_stall_prefill_tokens"], un["max_stall_prefill_tokens"])
+    out.append((
+        "serve_mixed_chunked_vs_unchunked",
+        round(un["max_stall_prefill_tokens"]
+              / max(1, ch["max_stall_prefill_tokens"]), 2),
+        # floats without unit suffixes so run.py's summary parses them
+        f"stall_tokens_chunked={ch['max_stall_prefill_tokens']};"
+        f"stall_tokens_unchunked={un['max_stall_prefill_tokens']};"
+        f"max_stall_ms_chunked={ch['max_stall_ms']:.2f};"
+        f"max_stall_ms_unchunked={un['max_stall_ms']:.2f};"
+        f"ttft_p95={float(np.percentile(np.asarray(ch['ttft']), 95)):.4f}",
+    ))
     return out
 
 

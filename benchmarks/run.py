@@ -29,8 +29,15 @@ JSON schema (schema_version 1):
                   "quant_speedup": float,       # best quantized/f32 ratio
                   "quant_weight_bytes_ratio": float,  # min modeled full/packed
                   "kv_quant_speedup": float,    # best int8-KV stream ratio
-                  "combined_byte_ratio": float}  # min modeled weights+KV vs
-    }                                            # weights-only decode bytes
+                  "combined_byte_ratio": float, # min modeled weights+KV vs
+                                                # weights-only decode bytes
+                  "stall_tokens_chunked": float,    # worst inter-token stall
+                  "stall_tokens_unchunked": float,  # (prefill tokens) under
+                                                    # mixed serve traffic
+                  "max_stall_ms": float,            # wall-clock stall, chunked
+                  "max_stall_ms_unchunked": float,  # ... and unchunked
+                  "ttft_p95": float}            # chunked-admission TTFT p95 (s)
+    }
 """
 
 import argparse
@@ -73,8 +80,18 @@ def _parse_metrics(derived: str) -> dict:
 def _summarize(rows: list[dict]) -> dict:
     gflops, roofline, speedups, structural = [], [], [], []
     q_speedups, q_ratios, kv_speedups, combined = [], [], [], []
+    stall = {}
     for row in rows:
         m = row["metrics"]
+        if row["name"] == "serve_mixed_chunked_vs_unchunked":
+            # chunked-admission head-of-line blocking (ISSUE 6): the bench
+            # emits these as plain floats so CI can gate the stall reduction
+            stall = {k: m[k] for k in ("stall_tokens_chunked",
+                                       "stall_tokens_unchunked",
+                                       "max_stall_ms_chunked",
+                                       "max_stall_ms_unchunked",
+                                       "ttft_p95")
+                     if isinstance(m.get(k), float)}
         for key in ("gflops", "gflops_fused"):
             if isinstance(m.get(key), float):
                 gflops.append(m[key])
@@ -108,6 +125,13 @@ def _summarize(rows: list[dict]) -> dict:
         # combined (weights+KV) decode byte reduction vs weights-only
         "kv_quant_speedup": max(kv_speedups) if kv_speedups else 0.0,
         "combined_byte_ratio": min(combined) if combined else 0.0,
+        # chunked admission under mixed serve traffic (ISSUE 6): worst
+        # inter-token stall for live slots, chunked vs unchunked admissions
+        "stall_tokens_chunked": stall.get("stall_tokens_chunked", 0.0),
+        "stall_tokens_unchunked": stall.get("stall_tokens_unchunked", 0.0),
+        "max_stall_ms": stall.get("max_stall_ms_chunked", 0.0),
+        "max_stall_ms_unchunked": stall.get("max_stall_ms_unchunked", 0.0),
+        "ttft_p95": stall.get("ttft_p95", 0.0),
     }
 
 

@@ -325,6 +325,23 @@ def kv_traffic_ratio(head_dim: int, *, full_bytes_per_elem: int = 2,
     return full_bytes_per_elem * head_dim / (head_dim + scale_bytes)
 
 
+def kv_fallback_byte_ratio(live_tokens: int, capacity: int, head_dim: int,
+                           *, full_bytes_per_elem: float = 2.0,
+                           scale_bytes: int = 4) -> float:
+    """Bytes the exact-dequant fallback streams per K/V head-vector, relative
+    to what a full-precision cache of the same CAPACITY would have streamed:
+    (packed reads + one scale per (token, head)) over the live prefix vs
+    `full_bytes_per_elem` per element over the capacity buffer.  The guard
+    the int8 fallback asserts — dequantizing the whole capacity-S buffer
+    (live_tokens == capacity, plus the expansion write) silently costs MORE
+    HBM traffic than the bf16 cache the int8 path replaced; slicing to the
+    live prefix keeps the ratio <= 1 whenever live <= capacity *
+    traffic_ratio."""
+    packed = live_tokens * (head_dim + scale_bytes)
+    full = capacity * head_dim * full_bytes_per_elem
+    return packed / full
+
+
 # --------------------------------------------------------------------------
 # Traffic model (what packing buys, in HBM bytes — asserted structurally)
 # --------------------------------------------------------------------------

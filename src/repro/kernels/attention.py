@@ -9,7 +9,12 @@ so HBM traffic is O(T*D) instead of O(T^2).
 
 Causal masking uses decode-style alignment: the query block sits at the END
 of the key range (offset = Tk - Tq), which serves both training (Tq == Tk)
-and single-step decode (Tq == 1) with one kernel.
+and single-step decode (Tq == 1) with one kernel.  `prefix_len` relaxes the
+causal mask for the first `prefix_len` absolute key positions (prefix-LM:
+the paligemma patch prefix attends bidirectionally, text stays causal), and
+`causal=False` drops it entirely (encoder self-attention, whisper
+cross-attention) — every mask variant the model zoo uses is in-kernel, so
+the serving stack needs exactly ONE attention engine.
 
 Two byte levers live here on top of the blocking:
 
@@ -51,8 +56,8 @@ NEG_INF = -1e30
 
 def _flash_kernel(
     q_ref, k_ref, v_ref, *refs,
-    nk: int, bq: int, bk: int, scale: float, causal: bool, q_len: int,
-    offset: int, kv_len: int, quantized: bool, dynamic_len: bool,
+    nk: int, bq: int, bk: int, scale: float, causal: bool, prefix_len: int,
+    q_len: int, offset: int, kv_len: int, quantized: bool, dynamic_len: bool,
     cache_layout: bool,
 ):
     # refs: [k_scales] [v_scales] [kv_lens] o m l acc
@@ -92,7 +97,12 @@ def _flash_kernel(
     last_q = iq * bq + bq - 1 + off
     visible = first_k < kvl
     if causal:
-        visible = jnp.logical_and(visible, first_k <= last_q)
+        causal_vis = first_k <= last_q
+        if prefix_len:
+            # prefix-LM: blocks inside the bidirectional prefix stay live
+            # even above the causal diagonal
+            causal_vis = jnp.logical_or(causal_vis, first_k < prefix_len)
+        visible = jnp.logical_and(visible, causal_vis)
 
     @pl.when(visible)
     def _body():
@@ -119,7 +129,13 @@ def _flash_kernel(
             kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             keep = jnp.full((bq, bk), True)
             if causal:
-                keep &= qpos >= kpos
+                cmask = qpos >= kpos
+                if prefix_len:
+                    # bidirectional within the first prefix_len absolute key
+                    # positions, causal after (the `kpos < kvl` key-validity
+                    # mask below still bounds the prefix to real keys)
+                    cmask |= kpos < prefix_len
+                keep &= cmask
             if mask_k:
                 keep &= kpos < kvl
             s = jnp.where(keep, s, NEG_INF)
@@ -153,6 +169,7 @@ def attention(
     kv_lens: jnp.ndarray = None,   # (BH,) int32 per-grid-row real KV lengths
     kv_groups: int = 1,            # query heads per stored K/V head (GQA)
     causal: bool = True,
+    prefix_len: int | None = None,  # prefix-LM: bidirectional first keys
     scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
@@ -170,7 +187,9 @@ def attention(
     `kv_lens` makes the real length per-grid-row (the continuous-batching
     ragged slot grid) instead of a launch constant; with `k_scales`/
     `v_scales` the K/V tiles are packed int8 (core.quant.quantize_kv) and
-    dequantize in-kernel.  4-D operands stream the KV cache's native
+    dequantize in-kernel.  `prefix_len` (with causal=True) makes the first
+    `prefix_len` ABSOLUTE key positions bidirectionally visible (prefix-LM);
+    it is ignored when causal=False (everything is visible already).  4-D operands stream the KV cache's native
     (B, T, H, D) layout — the grid row decomposes into (slot, head) inside
     the index maps, so no transposed copy is ever materialized.
     """
@@ -205,6 +224,7 @@ def attention(
         bk=block_k,
         scale=scale,
         causal=causal,
+        prefix_len=int(prefix_len or 0),
         q_len=q_len,
         offset=kv_len - q_len,
         kv_len=kv_len,

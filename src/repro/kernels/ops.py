@@ -478,10 +478,12 @@ def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray, *, block_n=2048):
 # --------------------------------------------------------------------------
 
 @functools.partial(
-    jax.jit, static_argnames=("causal", "block_q", "block_k", "kv_groups")
+    jax.jit,
+    static_argnames=("causal", "prefix_len", "block_q", "block_k", "kv_groups"),
 )
 def flash_attention(q, k, v, *, k_scales=None, v_scales=None, kv_lens=None,
-                    kv_groups=1, causal=True, block_q=128, block_k=128):
+                    kv_groups=1, causal=True, prefix_len=None, block_q=128,
+                    block_k=128):
     """(BH, Tq, D) x (BHkv, Tk, D) -> (BH, Tq, D).  4-D operands select the
     KV cache's native (B, T, H, D) layout instead — the kernel's index maps
     decompose the grid row into (slot, head), so the cache streams as it
@@ -498,10 +500,17 @@ def flash_attention(q, k, v, *, k_scales=None, v_scales=None, kv_lens=None,
     across that many consecutive query heads (GQA) via the index map — no
     materialized repeat.  `kv_lens` (BH,) replaces the shared real KV
     length with a per-row one (continuous-batching ragged slot decode).
+    `prefix_len` relaxes the causal mask over the first prefix_len absolute
+    key positions (prefix-LM, e.g. the paligemma patch prefix).
+
+    This is the ONE attention engine: every mask variant (causal, prefix-LM,
+    non-causal), both cache dtypes, and GQA route here under the pallas
+    backend — `models.layers.attention_core` survives only as the xla/ref
+    oracle these launches are pinned against.
     """
     return _attention.attention(
         q, k, v, k_scales=k_scales, v_scales=v_scales, kv_lens=kv_lens,
-        kv_groups=kv_groups, causal=causal,
+        kv_groups=kv_groups, causal=causal, prefix_len=prefix_len,
         block_q=block_q, block_k=block_k, interpret=_interpret(),
     )
 

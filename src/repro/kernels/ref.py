@@ -61,6 +61,7 @@ def attention(
     v: jnp.ndarray,  # (BH, Tk, D)
     *,
     causal: bool = True,
+    prefix_len: int | None = None,
     scale: float | None = None,
 ) -> jnp.ndarray:
     if scale is None:
@@ -70,6 +71,10 @@ def attention(
         tq, tk = q.shape[1], k.shape[1]
         # decode-style alignment: query block sits at the END of the kv range
         mask = jnp.tril(jnp.ones((tq, tk), bool), k=tk - tq)
+        if prefix_len:
+            # prefix-LM: the first prefix_len ABSOLUTE key positions are
+            # bidirectionally visible; text after the prefix stays causal
+            mask = mask | (jnp.arange(tk) < prefix_len)[None, :]
         s = jnp.where(mask[None], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)
@@ -82,13 +87,16 @@ def attention_lens(
     kv_lens: jnp.ndarray,  # (BH,) real KV length per row
     *,
     causal: bool = True,
+    prefix_len: int | None = None,
     scale: float | None = None,
 ) -> jnp.ndarray:
     """Full-materialization attention with PER-ROW real KV lengths: keys at
     positions >= kv_lens[b] are masked out, and the causal alignment puts the
     query block at the END of row b's real key range (offset = kv_lens[b] -
     Tq) — the semantics of the flash kernel's `kv_lens` operand (the
-    continuous-batching ragged slot grid)."""
+    continuous-batching ragged slot grid).  `prefix_len` (with causal) keeps
+    the first prefix_len absolute key positions bidirectionally visible
+    (prefix-LM); the kv_lens key mask still applies on top."""
     if scale is None:
         scale = q.shape[-1] ** -0.5
     tq, tk = q.shape[1], k.shape[1]
@@ -98,7 +106,10 @@ def attention_lens(
     keep = kpos < lens
     if causal:
         qpos = jnp.arange(tq, dtype=jnp.int32)[None, :, None] + lens - tq
-        keep = keep & (qpos >= kpos)
+        cmask = qpos >= kpos
+        if prefix_len:
+            cmask = cmask | (kpos < prefix_len)
+        keep = keep & cmask
     s = jnp.where(keep, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)
@@ -113,6 +124,7 @@ def attention_kv_dequant(
     *,
     kv_lens: jnp.ndarray | None = None,
     causal: bool = True,
+    prefix_len: int | None = None,
     scale: float | None = None,
 ) -> jnp.ndarray:
     """EXACT dequantization oracle for int8-KV flash attention: materialize
@@ -128,8 +140,9 @@ def attention_kv_dequant(
         k = jnp.repeat(k, groups, axis=0)
         v = jnp.repeat(v, groups, axis=0)
     if kv_lens is not None:
-        return attention_lens(q, k, v, kv_lens, causal=causal, scale=scale)
-    return attention(q, k, v, causal=causal, scale=scale)
+        return attention_lens(q, k, v, kv_lens, causal=causal,
+                              prefix_len=prefix_len, scale=scale)
+    return attention(q, k, v, causal=causal, prefix_len=prefix_len, scale=scale)
 
 
 # --------------------------------------------------------------------------

@@ -52,7 +52,8 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
           scheduler: str = "continuous",
           gen_lens: Optional[Sequence[int]] = None,
           prompts: Optional[Sequence[np.ndarray]] = None,
-          quantize: str = "none", kv_cache: str = "model"):
+          quantize: str = "none", kv_cache: str = "model",
+          prefill_chunk: Optional[int] = None):
     """Serve `requests` synthetic prompts through greedy decode.
 
     quantize="int8" packs every projection weight with block-scaled int8
@@ -76,6 +77,13 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
     sequential oracle).  The continuous scheduler admits ragged prompt
     lengths (one admission prefill per distinct length per round); the
     batch scheduler requires uniform lengths and raises otherwise.
+    prefill_chunk: continuous scheduler only — split every admission prefill
+    into chunks of at most this many tokens, INTERLEAVED with decode steps,
+    so a long-prompt admission no longer stalls every live slot's next token
+    (TTFT head-of-line blocking under mixed traffic).  Chunk c continues the
+    same cache-carrying prefill at the mini cache's position, so the grafted
+    cache — and every generated token — is bit-identical to the unchunked
+    admission's.
     Under --backend pallas the batched decode routes its
     projections through the fused batched kernels: every (B, 1, d) matmul is
     one bgemv launch over the request batch with broadcast weights.
@@ -114,6 +122,11 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
         raise ValueError(f"kv_cache must be 'model' or 'int8', got {kv_cache!r}")
     if kv_cache == "int8":
         cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    if prefill_chunk is not None and prefill_chunk < 1:
+        raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+    if prefill_chunk is not None and scheduler != "continuous":
+        raise ValueError("prefill_chunk interleaves admission chunks with "
+                         "decode steps and needs --scheduler continuous")
     with blas.use_backend(backend):
         if scheduler == "continuous":
             if cfg.family not in tf.SLOT_CACHE_FAMILIES:
@@ -123,7 +136,7 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
                     f"--scheduler batch"
                 )
             stats = _serve_continuous(cfg, prompts, list(gen_lens), batch, seed,
-                                      eos, quantize)
+                                      eos, quantize, prefill_chunk)
         elif scheduler == "batch":
             stats = _serve_batch(cfg, prompts, list(gen_lens), batch, seed, eos,
                                  quantize)
@@ -145,6 +158,12 @@ def _new_stats(nreq: int) -> dict:
         "ttft": [None] * nreq,
         "admit_step": [None] * nreq,
         "finish_step": [None] * nreq,
+        # worst case over the run, measured between consecutive decode steps
+        # while live slots exist: wall clock, and — deterministically — how
+        # many admission-prefill tokens were processed in the gap (the
+        # head-of-line blocking chunked admission exists to bound)
+        "max_stall_ms": 0.0,
+        "max_stall_prefill_tokens": 0,
     }
 
 
@@ -208,9 +227,17 @@ def _quantize_params(params, quantize: str):
     return params
 
 
-def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none"):
+def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
+                      prefill_chunk=None):
     """Slot-level admission: finished sequences free their slot immediately;
-    each free slot prefills the next FIFO request into the shared cache."""
+    each free slot prefills the next FIFO request into the shared cache.
+
+    With `prefill_chunk`, an admission prefill longer than the chunk runs as
+    a sequence of fixed-size chunk prefills through the SAME cache-carrying
+    prefill step (positions continue at the mini cache's pos), and every
+    chunk boundary is a decode opportunity for the live slots — one long
+    admission costs each live slot at most one chunk of prefill work between
+    its tokens instead of the whole prompt."""
     nreq = len(prompts)
     cache_len = _cache_len(cfg, prompts, gen_lens)
     rng = np.random.default_rng(seed + 1)
@@ -248,8 +275,44 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none")
     stats = _new_stats(nreq)
     occ = []
     t0 = time.time()
+    # inter-token stall trackers for LIVE slots: wall clock of the previous
+    # decode step, and admission-prefill tokens processed since it
+    last_decode = [None]
+    prefill_gap = [0]
+
+    def decode_round():
+        """One masked decode step over the live slots + host bookkeeping —
+        called from the main loop AND between admission prefill chunks."""
+        nonlocal tok_dev, cache, active_dev
+        occ.append(active.sum() / batch)
+        tok_dev, cache = decode_fn(params, tok_dev, cache, active_dev)
+        stats["decode_steps"] += 1
+        tok_np = np.asarray(tok_dev)[:, 0]
+        now = time.time()
+        if last_decode[0] is not None:
+            stats["max_stall_ms"] = max(stats["max_stall_ms"],
+                                        (now - last_decode[0]) * 1e3)
+        last_decode[0] = now
+        stats["max_stall_prefill_tokens"] = max(
+            stats["max_stall_prefill_tokens"], prefill_gap[0])
+        prefill_gap[0] = 0
+        finished = False
+        for s in range(batch):
+            if not active[s]:
+                continue
+            slot_left[s] -= 1
+            if _record_token(stats, slot_req[s], int(tok_np[s]), eos, slot_left[s]):
+                active[s] = False
+                slot_req[s] = -1
+                finished = True
+        if finished:
+            active_dev = jnp.asarray(active)
 
     while pending or active.any():
+        if not active.any():
+            # nobody live to stall: an admission from an idle grid is free
+            last_decode[0] = None
+            prefill_gap[0] = 0
         # admission: every free slot takes the next pending request at this
         # step boundary — no waiting for the batch to drain.  Like decode,
         # the admission prefill runs on the fixed grid shape (one launch per
@@ -270,11 +333,24 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none")
             for i, (s, _, prompt) in enumerate(group):
                 block[i] = prompt
                 slots[i] = s
-            batch_in = {"tokens": jnp.asarray(block)}
-            batch_in.update(_prefill_extras(cfg, rng, batch, 0))
-            tok0, mini = prefill_fn(params, batch_in, mini_zero)
+            csize = plen if prefill_chunk is None else min(prefill_chunk, plen)
+            mini = mini_zero
+            tok0 = None
+            for start in range(0, plen, csize):
+                if start and active.any():
+                    # a chunk boundary is a decode opportunity: every live
+                    # slot advances one token before the next prefill chunk
+                    decode_round()
+                batch_in = {"tokens": jnp.asarray(block[:, start:start + csize])}
+                if start == 0:
+                    # patches/frames ride on the first chunk only (the vlm
+                    # prefix sits at the front of the sequence)
+                    batch_in.update(_prefill_extras(cfg, rng, batch, 0))
+                tok0, mini = prefill_fn(params, batch_in, mini)
+                stats["prefills"] += 1
+                if active.any():
+                    prefill_gap[0] += min(csize, plen - start)
             cache, tok_dev = admit_fn(cache, mini, jnp.asarray(slots), tok_dev, tok0)
-            stats["prefills"] += 1
             tok0_np = np.asarray(tok0)[:, 0]  # sync BEFORE stamping TTFT
             t_first = time.time() - t0
             for i, (s, rid, _) in enumerate(group):
@@ -284,25 +360,12 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none")
                     active[s] = True
                     slot_req[s] = rid
                     slot_left[s] = gen_lens[rid] - 1
-        if admits:
+            # refresh the device mask per GROUP (not per round): a later
+            # group's chunk-boundary decode must advance this group's slots
             active_dev = jnp.asarray(active)
         if not active.any():
             continue  # remaining pending requests all finished at prefill
-        occ.append(active.sum() / batch)
-        tok_dev, cache = decode_fn(params, tok_dev, cache, active_dev)
-        stats["decode_steps"] += 1
-        tok_np = np.asarray(tok_dev)[:, 0]
-        finished = False
-        for s in range(batch):
-            if not active[s]:
-                continue
-            slot_left[s] -= 1
-            if _record_token(stats, slot_req[s], int(tok_np[s]), eos, slot_left[s]):
-                active[s] = False
-                slot_req[s] = -1
-                finished = True
-        if finished:
-            active_dev = jnp.asarray(active)
+        decode_round()
     return _finalize(stats, occ, t0)
 
 
@@ -360,10 +423,16 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none"):
             stats["admit_step"][rid] = stats["decode_steps"]
             left[i] = gen_lens[rid] - 1
             done[i] = _record_token(stats, rid, int(tok_np[i]), eos, left[i])
+        last_decode = None  # batch boundary: nobody is live across it
         while not done.all():
             occ.append((~done).sum() / batch)
             tok, cache = decode_fn(params, tok, cache)
             stats["decode_steps"] += 1
+            now = time.time()
+            if last_decode is not None:
+                stats["max_stall_ms"] = max(stats["max_stall_ms"],
+                                            (now - last_decode) * 1e3)
+            last_decode = now
             tok_np = np.asarray(tok)[:, 0]
             for i, (rid, _) in enumerate(group):
                 if done[i]:
@@ -393,10 +462,17 @@ def main():
                          "streams ~1 byte/element of K/V (combine with "
                          "--quantize int8 for the fully-quantized decode "
                          "byte path)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="continuous scheduler: split admission prefills "
+                         "into chunks of at most this many tokens, "
+                         "interleaved with decode steps (0 = unchunked) — "
+                         "bounds the inter-token stall a long admission "
+                         "inflicts on live slots")
     args = ap.parse_args()
     serve(args.arch, args.variant, args.requests, args.batch, args.prompt_len,
           args.gen, backend=args.backend, scheduler=args.scheduler,
-          quantize=args.quantize, kv_cache=args.kv_cache)
+          quantize=args.quantize, kv_cache=args.kv_cache,
+          prefill_chunk=args.prefill_chunk or None)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import blas, quant
 from repro.core.act_sharding import constrain
@@ -207,15 +208,23 @@ def attention_core(
         p = jax.nn.softmax(s, axis=-1)
         return jnp.moveaxis(_attn_combine(p, v), 1, 2).astype(q.dtype)
 
+    # cdiv chunking with masked final blocks.  Regression note: this used to
+    # search for the largest DIVISOR <= the chunk size, which degrades prime
+    # tq/tk to chunk size 1 — an 8191-token prompt ran 8191^2 scan steps.
     qc = min(q_chunk, tq)
-    while tq % qc:   # largest divisor <= q_chunk (cross-attn: tk=1500 etc.)
-        qc -= 1
     kc = min(kv_chunk, tk)
-    while tk % kc:
-        kc -= 1
-    nq, nk = tq // qc, tk // kc
+    nq, nk = -(-tq // qc), -(-tk // kc)
+    pad_q, pad_k = nq * qc - tq, nk * kc - tk
+    if pad_q:
+        # fringe query rows compute garbage and are sliced off after the scan
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        # fringe keys are masked out of the scores (kpos < tk below); the V
+        # fringe is zero-padded so it cannot poison the accumulator
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     scale = hd ** -0.5
-    kpos_all = jnp.arange(tk, dtype=jnp.int32).reshape(nk, kc)
+    kpos_all = jnp.arange(nk * kc, dtype=jnp.int32).reshape(nk, kc)
     k_blocks = constrain(k.reshape(b, nk, kc, h, hd), "dp", None, None, "tp", "tp?")
     v_blocks = constrain(v.reshape(b, nk, kc, h, hd), "dp", None, None, "tp", "tp?")
 
@@ -232,10 +241,15 @@ def attention_core(
             ki, kblk, vblk, kpos = kv_in
             kb = jnp.moveaxis(kblk.astype(jnp.float32), 2, 1).reshape(b * h, kc, hd)
             s = blas.batched_gemm(qb, kb, transpose_b=True).reshape(b, h, qc, kc)
-            if causal:
-                mask = qpos[:, :, None] >= kpos[None, None, :]
-                if prefix_len is not None:
-                    mask = mask | (kpos[None, None, :] < prefix_len)
+            if causal or pad_k:
+                mask = None
+                if causal:
+                    mask = qpos[:, :, None] >= kpos[None, None, :]
+                    if prefix_len is not None:
+                        mask = mask | (kpos[None, None, :] < prefix_len)
+                if pad_k:
+                    kmask = (kpos < tk)[None, None, :]
+                    mask = kmask if mask is None else mask & kmask
                 s = jnp.where(mask[:, None], s, -1e30)
             s = constrain(s, "dp", "tp", None, None)
             m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
@@ -267,7 +281,8 @@ def attention_core(
         jnp.moveaxis(q.reshape(b, nq, qc, h, hd), 1, 0), None, "dp", None, "tp", "tp?"
     )
     _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq, dtype=jnp.int32), q_xs))
-    return jnp.moveaxis(outs, 0, 1).reshape(b, tq, h, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * qc, h, hd)
+    return out[:, :tq] if pad_q else out
 
 
 # --------------------------------------------------------------------------
@@ -348,38 +363,94 @@ def _cache_write_kv(bufs: tuple, qt: "quant.QuantizedTensor", pos: jnp.ndarray) 
     return write(vbuf, sbuf, *new, pos)
 
 
-def _packed_flash_eligible(cfg: "AttnConfig", prefix_len) -> bool:
-    """The int8-KV flash path covers standard causal attention (the dense/
-    moe decode families); prefix-LM masks (vlm prefill) and non-causal
-    layers fall back to the exact-dequant attention_core path."""
-    return (blas.get_backend() == "pallas" and cfg.causal
-            and prefix_len is None and not cfg.full_scores)
+def _flash_eligible(cfg: "AttnConfig") -> bool:
+    """ONE attention engine under the pallas backend: every mask variant
+    (causal, prefix-LM, non-causal), both cache dtypes, and GQA lower to
+    `ops.flash_attention`; `attention_core` survives only as the xla/ref
+    oracle.  The single exception is the dry-run cost mode (full_scores),
+    which exists to keep the score matmuls visible to HLO cost analysis."""
+    return blas.get_backend() == "pallas" and not cfg.full_scores
 
 
-def _packed_flash_attention(q, kv, ks, vv, vs, pos, t: int, groups: int):
-    """Attention over the PACKED int8 KV cache via the flash Pallas kernel.
-
-    q (B, T, H, hd); kv/vv (B, S, KVH, hd) int8 values with ks/vs
-    (B, S, KVH, 1) per-(token, head) scales; pos is the pre-write cache
-    position (scalar, or (B,) for the continuous-batching ragged slot grid).
-    Everything streams in the cache's NATIVE layout — the kernel's 4-D
-    BlockSpecs decompose the grid row into (slot, head), so no transposed
-    copy of the cache is ever materialized between the scatter and the
-    launch.  The kernel reads 1 byte/element of K/V (plus the scale rows),
-    dequantizes in-kernel against the f32 softmax accumulator, folds GQA
-    head sharing into its index map, and masks per-row real lengths — one
-    launch, ~half the attention bytes of the bf16 cache read.
-    """
-    b, tq, h, hd = q.shape
-    # per-row real KV length AFTER the write: scalar pos broadcasts, a (B,)
-    # per-slot vector expands over that slot's query heads
-    lens = jnp.broadcast_to(
+def _expand_kv_lens(pos, t: int, b: int, h: int) -> jnp.ndarray:
+    """Per-grid-row real KV length AFTER this step's write: scalar pos
+    broadcasts, a (B,) per-slot vector expands over that slot's query heads
+    (the continuous-batching ragged slot grid)."""
+    return jnp.broadcast_to(
         (jnp.asarray(pos, jnp.int32) + t).reshape(-1, 1), (b, h)
     ).reshape(b * h)
+
+
+def _flash_cache_attention(q, kv, vv, pos, t: int, groups: int, *,
+                           causal: bool = True, prefix_len=None,
+                           ks=None, vs=None):
+    """Attention over the KV cache via the flash Pallas kernel.
+
+    q (B, T, H, hd); kv/vv (B, S, KVH, hd) cache buffers — dense bf16/f32,
+    or (with ks/vs (B, S, KVH, 1) per-(token, head) scales) PACKED int8
+    values dequantized in-kernel at 1 byte/element.  pos is the pre-write
+    cache position (scalar, or (B,) for the continuous-batching ragged slot
+    grid).  Everything streams in the cache's NATIVE layout — the kernel's
+    4-D BlockSpecs decompose the grid row into (slot, head), so no
+    transposed copy of the cache is ever materialized between the scatter
+    and the launch; GQA head sharing folds into the index map (no repeat_kv
+    materialization), per-row real lengths mask the dead capacity tail, and
+    `causal`/`prefix_len` select the mask in-kernel (satellite fix: the old
+    packed path hardcoded causal=True and eligibility-gated everything
+    else out to the dequant fallback).
+    """
+    b, tq, h, hd = q.shape
+    lens = _expand_kv_lens(pos, t, b, h)
     from repro.kernels import ops
     out = ops.flash_attention(q, kv, vv, k_scales=ks, v_scales=vs,
-                              kv_lens=lens, kv_groups=groups, causal=True)
+                              kv_lens=lens, kv_groups=groups, causal=causal,
+                              prefix_len=prefix_len)
     return out.astype(q.dtype)
+
+
+def attention_dispatch(
+    q: jnp.ndarray,  # (B, Tq, H, hd)
+    k: jnp.ndarray,  # (B, Tk, KVH, hd) — UN-expanded GQA heads
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    prefix_len: Optional[int] = None,
+    q_offset: Optional[jnp.ndarray] = None,
+    groups: int = 1,
+    full_scores: bool = False,
+) -> jnp.ndarray:
+    """The single attention entry point for cache-less operands (training
+    forward, encoder self-attention, whisper cross-attention — and the
+    dense-cache path, whose buffers are plain arrays too): pallas lowers to
+    the flash kernel with the mask folded in-kernel; xla/ref run the
+    `attention_core` oracle.  `q_offset` (the pre-write cache position)
+    doubles as the real-KV-length seed — flash masks the dead capacity tail
+    via per-row kv_lens, the oracle via its causal offset."""
+    if blas.get_backend() == "pallas" and not full_scores:
+        b, tq, h, _ = q.shape
+        kv_lens = None if q_offset is None else _expand_kv_lens(q_offset, tq, b, h)
+        from repro.kernels import ops
+        return ops.flash_attention(
+            q, k, v, kv_lens=kv_lens, kv_groups=groups, causal=causal,
+            prefix_len=prefix_len,
+        ).astype(q.dtype)
+    return attention_core(
+        q, repeat_kv(k, groups), repeat_kv(v, groups), causal=causal,
+        prefix_len=prefix_len, q_offset=q_offset, full_scores=full_scores,
+    )
+
+
+def _live_kv_len(pos, t: int, capacity: int) -> int:
+    """Static upper bound on the live KV prefix after this step's write.
+    Concrete pos (eager oracle calls) gives the exact bound; a traced pos
+    (jit'd serving step) cannot shrink a static slice shape, so it stays at
+    capacity — the flash path never pays this, it culls dead key blocks
+    in-kernel.  The reduction runs in numpy: inside a trace (e.g. the
+    scanned-layers forward) even a concrete pos constant would come back
+    from jnp ops as a tracer."""
+    if isinstance(pos, jax.core.Tracer):
+        return capacity
+    return min(capacity, int(np.max(np.asarray(pos))) + t)
 
 
 def attention_layer(
@@ -433,32 +504,56 @@ def attention_layer(
             ck, cks = _cache_write_kv((cache["k"], cache["k_scale"]), kq, pos)
             cv, cvs = _cache_write_kv((cache["v"], cache["v_scale"]), vq, pos)
             new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs, "pos": pos + t}
-            if _packed_flash_eligible(cfg, prefix_len):
+            if _flash_eligible(cfg):
                 # pallas: the flash kernel streams the PACKED int8 tiles and
                 # dequantizes in-kernel — the cache is never expanded to
-                # full precision in HBM, and GQA head sharing happens in the
-                # kernel's index map (no repeat_kv materialization)
-                out = _packed_flash_attention(q, ck, cks, cv, cvs, pos, t,
-                                              groups)
+                # full precision in HBM, GQA head sharing happens in the
+                # kernel's index map (no repeat_kv materialization), and the
+                # mask (causal / prefix-LM / non-causal) folds in-kernel
+                out = _flash_cache_attention(q, ck, cv, pos, t, groups,
+                                             causal=cfg.causal,
+                                             prefix_len=prefix_len,
+                                             ks=cks, vs=cvs)
             else:
-                # xla/ref: exact dequantization oracle semantics
-                k_full = quant.dequantize_kv(ck, cks, x.dtype)
-                v_full = quant.dequantize_kv(cv, cvs, x.dtype)
+                # xla/ref: exact dequantization oracle semantics — over the
+                # LIVE prefix only (satellite fix: dequantizing the full
+                # capacity-S buffer cost more HBM bytes than the bf16 cache
+                # the int8 path replaced)
+                live = _live_kv_len(pos, t, ck.shape[1])
+                ratio = quant.kv_fallback_byte_ratio(live, ck.shape[1], hd)
+                assert ratio <= 1.0, (
+                    f"int8-KV fallback dequant would stream {ratio:.2f}x the "
+                    f"bytes of the bf16 cache it replaced "
+                    f"(live={live}, capacity={ck.shape[1]}, head_dim={hd})"
+                )
+                k_full = quant.dequantize_kv(ck[:, :live], cks[:, :live], x.dtype)
+                v_full = quant.dequantize_kv(cv[:, :live], cvs[:, :live], x.dtype)
         else:
             ck = _cache_write(cache["k"], k.astype(cache["k"].dtype), pos)
             cv = _cache_write(cache["v"], v.astype(cache["v"].dtype), pos)
             new_cache = {"k": ck, "v": cv, "pos": pos + t}
-            k_full, v_full = ck, cv
+            if _flash_eligible(cfg):
+                # pallas: the flash kernel streams the dense cache buffer
+                # untouched (native layout, no slice/copy) and masks the
+                # dead capacity tail via per-row kv_lens
+                out = _flash_cache_attention(q, ck, cv, pos, t, groups,
+                                             causal=cfg.causal,
+                                             prefix_len=prefix_len)
+            else:
+                # oracle fallback reads only the live prefix: the causal
+                # offset hides the dead tail anyway, but a NON-causal cached
+                # launch would otherwise attend stale capacity rows
+                live = _live_kv_len(pos, t, ck.shape[1])
+                k_full, v_full = ck[:, :live], cv[:, :live]
         q_offset = pos
     else:
         k_full, v_full = k, v
         q_offset = None
 
     if out is None:
-        out = attention_core(
-            q, repeat_kv(k_full, groups), repeat_kv(v_full, groups),
-            causal=cfg.causal, prefix_len=prefix_len, q_offset=q_offset,
-            full_scores=cfg.full_scores,
+        out = attention_dispatch(
+            q, k_full, v_full, causal=cfg.causal, prefix_len=prefix_len,
+            q_offset=q_offset, groups=groups, full_scores=cfg.full_scores,
         )
     # residual (the block's skip connection) fuses into the output
     # projection's flush: attn-out + residual is one HBM write

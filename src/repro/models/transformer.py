@@ -399,9 +399,16 @@ def _audio_forward(params, x_dec, batch, cfg: ModelConfig, positions, cache=None
             v = blas.matmul(enc, lp["xattn"]["wv"])
         bq_, tq_, _ = hx.shape
         q = q.reshape(bq_, tq_, cfg.n_heads, cfg.hd)
-        k = layers.repeat_kv(k.reshape(bq_, enc.shape[1], cfg.n_kv, cfg.hd), cfg.n_heads // cfg.n_kv)
-        v = layers.repeat_kv(v.reshape(bq_, enc.shape[1], cfg.n_kv, cfg.hd), cfg.n_heads // cfg.n_kv)
-        ho = layers.attention_core(q, k, v, causal=False)
+        k = k.reshape(bq_, enc.shape[1], cfg.n_kv, cfg.hd)
+        v = v.reshape(bq_, enc.shape[1], cfg.n_kv, cfg.hd)
+        # one attention engine: the dispatcher lowers this non-causal launch
+        # to the flash kernel under pallas (GQA folded in its index map, no
+        # repeat_kv materialization) and to the attention_core oracle on
+        # xla/ref
+        ho = layers.attention_dispatch(
+            q, k, v, causal=False, groups=cfg.n_heads // cfg.n_kv,
+            full_scores=cfg.attn_full_scores,
+        )
         x = blas.matmul_fused(
             ho.reshape(bq_, tq_, cfg.n_heads * cfg.hd), lp["xattn"]["wo"],
             residual=x,

@@ -242,7 +242,7 @@ def test_flash_attention_gqa_groups_share_kv(quantized):
 def test_flash_attention_cache_layout_gqa_lens():
     """The 4-D cache-layout path (no moveaxis/reshape of the cache) with
     GQA groups AND per-slot lens — the exact decode configuration
-    layers._packed_flash_attention launches — must match the flat-layout
+    layers._flash_cache_attention launches — must match the flat-layout
     dequant oracle.  Guards the (r % h) // g head decomposition in the 4-D
     index maps, which no MHA serve config exercises."""
     from repro.core import quant

@@ -191,3 +191,25 @@ def test_attention_core_chunked_matches_full_scores():
     np.testing.assert_allclose(
         np.asarray(out_chunked), np.asarray(out_full), rtol=2e-4, atol=2e-4
     )
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_core_prime_lengths_chunked(causal):
+    """Regression: the chunk-size selection searched for the largest DIVISOR
+    of tq/tk, so prime lengths degraded to qc=kc=1 — an 8191-token prompt ran
+    8191^2 scan steps (this test would effectively hang).  cdiv chunking with
+    masked final blocks keeps the configured chunk sizes for any length and
+    must still match the single-block softmax."""
+    from repro.models import layers
+
+    b, h, hd = 1, 2, 16
+    tq = tk = 2311  # prime, and 2311^2 > 4096*1024 -> chunked scan path
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, tq, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, tk, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, tk, h, hd), jnp.float32)
+    out_chunked = layers.attention_core(q, k, v, causal=causal)
+    out_full = layers.attention_core(q, k, v, causal=causal, full_scores=True)
+    np.testing.assert_allclose(
+        np.asarray(out_chunked), np.asarray(out_full), rtol=2e-4, atol=2e-4
+    )

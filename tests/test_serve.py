@@ -388,3 +388,67 @@ def test_partial_occupancy_decode_routes_through_bgemv(monkeypatch):
     assert calls, "pallas decode never hit the fused bgemv path"
     assert all(ndim == 2 for ndim, _ in calls)      # broadcast (2-D) weights
     assert {b for _, b in calls} == {2}             # full slot grid every launch
+
+
+# --------------------------------------------------------------------------
+# Chunked admission prefill: token parity + no live-slot starvation
+# --------------------------------------------------------------------------
+
+def test_chunked_prefill_token_parity_and_no_starvation():
+    """Splitting a long admission prefill into chunks interleaved with decode
+    steps changes WHEN live slots decode, never what anyone generates — and
+    bounds the head-of-line stall at one chunk of prefill work."""
+    cfg = get_config(ARCH, "smoke")
+    rng = np.random.default_rng(41)
+    shorts = [rng.integers(3, cfg.vocab, size=(6,), dtype=np.int32) for _ in range(2)]
+    longp = rng.integers(3, cfg.vocab, size=(48,), dtype=np.int32)
+    prompts = shorts + [longp]
+    # slot 0's request finishes fast and frees the slot; the 48-token prompt
+    # is then admitted while slot 1 is still live (13 tokens left)
+    gen_lens = [3, 16, 4]
+    kw = dict(batch=2, gen_lens=gen_lens, eos=NO_EOS, verbose=False,
+              scheduler="continuous", prompts=prompts)
+    un = serve(ARCH, "smoke", **kw)
+    ch = serve(ARCH, "smoke", prefill_chunk=8, **kw)
+    want = _sequential_oracle(prompts, gen_lens)
+    assert un["outputs"] == want
+    assert ch["outputs"] == want
+    # unchunked: the live slot waits out the whole 48-token prefill between
+    # two of its tokens; chunked: at most one 8-token chunk
+    assert un["max_stall_prefill_tokens"] == 48
+    assert ch["max_stall_prefill_tokens"] == 8
+    # the live slot actually decodes DURING the admission: decode steps
+    # advance between chunks, so the long request is admitted later (in
+    # decode-step time) than under the unchunked scheduler
+    assert ch["admit_step"][2] > un["admit_step"][2]
+    assert ch["max_stall_ms"] > 0 and un["max_stall_ms"] > 0
+
+
+def test_chunked_prefill_parity_pallas_quantized():
+    """Chunked admission composes with the fully-quantized pallas decode
+    path (int8 weights + int8 KV through the flash kernel): greedy tokens
+    stay identical to the unchunked scheduler and the sequential oracle."""
+    cfg = get_config(ARCH, "smoke")
+    rng = np.random.default_rng(43)
+    prompts = [rng.integers(3, cfg.vocab, size=(n,), dtype=np.int32)
+               for n in (5, 5, 24)]
+    gen_lens = [2, 10, 3]
+    kw = dict(batch=2, gen_lens=gen_lens, eos=NO_EOS, verbose=False,
+              scheduler="continuous", prompts=prompts, backend="pallas",
+              quantize="int8", kv_cache="int8")
+    un = serve(ARCH, "smoke", **kw)
+    ch = serve(ARCH, "smoke", prefill_chunk=8, **kw)
+    want = _sequential_oracle(prompts, gen_lens, quantize="int8",
+                              kv_cache="int8", backend="pallas")
+    assert un["outputs"] == want
+    assert ch["outputs"] == want
+    assert ch["max_stall_prefill_tokens"] < un["max_stall_prefill_tokens"]
+
+
+def test_prefill_chunk_requires_continuous_scheduler():
+    with pytest.raises(ValueError, match="continuous"):
+        serve(ARCH, "smoke", requests=2, batch=2, prompt_len=8, gen=2,
+              verbose=False, scheduler="batch", prefill_chunk=4)
+    with pytest.raises(ValueError, match=">= 1"):
+        serve(ARCH, "smoke", requests=2, batch=2, prompt_len=8, gen=2,
+              verbose=False, scheduler="continuous", prefill_chunk=0)
