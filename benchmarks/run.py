@@ -36,7 +36,12 @@ JSON schema (schema_version 1):
                                                     # mixed serve traffic
                   "max_stall_ms": float,            # wall-clock stall, chunked
                   "max_stall_ms_unchunked": float,  # ... and unchunked
-                  "ttft_p95": float}            # chunked-admission TTFT p95 (s)
+                  "ttft_p95": float,            # chunked-admission TTFT p95 (s)
+                  "paged_capacity_multiplier": float,  # logical/physical pages
+                                                       # under a shared prefix
+                  "paged_token_parity": float,  # 1.0 iff paged == dense tokens
+                  "paged_pages_live": float,    # peak distinct physical pages
+                  "paged_pages_shared": float}  # peak pages with refcount > 1
     }
 """
 
@@ -81,8 +86,16 @@ def _summarize(rows: list[dict]) -> dict:
     gflops, roofline, speedups, structural = [], [], [], []
     q_speedups, q_ratios, kv_speedups, combined = [], [], [], []
     stall = {}
+    paged = {}
     for row in rows:
         m = row["metrics"]
+        if row["name"] == "serve_paged_shared_prefix":
+            # paged KV cache + shared-prefix reuse (ISSUE 7): effective-
+            # capacity multiplier and dense-path token parity, for the CI gate
+            paged = {k: m[k] for k in ("paged_capacity_multiplier",
+                                       "pages_live", "pages_shared",
+                                       "token_parity")
+                     if isinstance(m.get(k), float)}
         if row["name"] == "serve_mixed_chunked_vs_unchunked":
             # chunked-admission head-of-line blocking (ISSUE 6): the bench
             # emits these as plain floats so CI can gate the stall reduction
@@ -132,6 +145,13 @@ def _summarize(rows: list[dict]) -> dict:
         "max_stall_ms": stall.get("max_stall_ms_chunked", 0.0),
         "max_stall_ms_unchunked": stall.get("max_stall_ms_unchunked", 0.0),
         "ttft_p95": stall.get("ttft_p95", 0.0),
+        # paged KV cache with shared-prefix reuse (ISSUE 7): per-slot logical
+        # pages / distinct physical pages (peak) under a shared system
+        # prompt, plus greedy-token parity of the paged run vs the dense one
+        "paged_capacity_multiplier": paged.get("paged_capacity_multiplier", 0.0),
+        "paged_token_parity": paged.get("token_parity", 0.0),
+        "paged_pages_live": paged.get("pages_live", 0.0),
+        "paged_pages_shared": paged.get("pages_shared", 0.0),
     }
 
 

@@ -40,6 +40,16 @@ for sched in continuous batch; do
     --scheduler "$sched" --quantize int8 --kv-cache int8
 done
 
+# Paged-KV smoke: the page-pool cache (shared-prefix reuse, copy-on-write,
+# free-list recycling) runs end to end through both schedulers with the
+# int8 KV cache stacked on top (ISSUE 7) — the page-table indirection and
+# the quantized byte path compose in one serving run.
+for sched in continuous batch; do
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.launch.serve \
+    --variant smoke --requests 6 --batch 2 --prompt-len 8 --gen 4 \
+    --scheduler "$sched" --kv-cache int8 --kv-page-size 4
+done
+
 # Fused-MLP + quantized-streaming smoke + perf-trajectory JSON: the
 # kernel/fused-epilogue/quantized benches run end-to-end and emit
 # BENCH_kernels.json (GFLOP/s, GB/s + %-of-measured-bandwidth for the
@@ -65,7 +75,8 @@ assert {"max_gflops", "pct_roofline", "fused_speedup", "min_fused_speedup",
         "quant_weight_bytes_ratio", "kv_quant_speedup",
         "combined_byte_ratio", "stall_tokens_chunked",
         "stall_tokens_unchunked", "max_stall_ms", "max_stall_ms_unchunked",
-        "ttft_p95"} <= set(s), s
+        "ttft_p95", "paged_capacity_multiplier", "paged_token_parity",
+        "paged_pages_live", "paged_pages_shared"} <= set(s), s
 assert s["max_gflops"] > 0 and 0 < s["pct_roofline"] <= 1, s
 # the fused epilogue must win structurally (fewer launches + HBM round
 # trips on every fused row) AND show no real wall-clock regression: the
@@ -95,6 +106,14 @@ assert s["stall_tokens_chunked"] < s["stall_tokens_unchunked"], s
 assert s["stall_tokens_chunked"] > 0 and s["max_stall_ms"] > 0, s
 assert s["max_stall_ms_unchunked"] > 0, s
 assert s["ttft_p95"] > 0, s
+# paged KV cache with shared-prefix reuse (ISSUE 7): under a shared system
+# prompt at batch 4 the pool must hold the prefix ONCE (per-slot logical
+# pages / distinct physical pages > 1.5x effective capacity), and the
+# paged run's greedy tokens must be bit-identical to the dense cache
+# (the bench asserts output equality and reports parity as 1.0)
+assert s["paged_capacity_multiplier"] > 1.5, s
+assert s["paged_token_parity"] == 1.0, s
+assert s["paged_pages_live"] > 0 and s["paged_pages_shared"] > 0, s
 # bandwidth-bound rows must carry the GB/s roofline column
 names = {r["name"] for r in d["rows"]}
 for prefix in ("blas_gemv_", "blas_bgemv_", "blas_ddot_"):

@@ -342,6 +342,24 @@ def kv_fallback_byte_ratio(live_tokens: int, capacity: int, head_dim: int,
     return packed / full
 
 
+def paged_fallback_byte_ratio(live_tokens: int, gathered_tokens: int,
+                              head_dim: int, *, packed: bool = False,
+                              full_bytes_per_elem: float = 2.0,
+                              scale_bytes: int = 4) -> float:
+    """Bytes the PAGED xla/ref fallback streams per K/V head-vector, relative
+    to a full-precision read of exactly the LIVE prefix.  `gathered_tokens`
+    is page_size * n_pages_gathered — the tokens the pool gather actually
+    touches.  The guard the paged fallback asserts: gathering the whole pool
+    (gathered ~ pool capacity) makes this ratio grow with POOL size, while a
+    live-pages-only gather bounds it by one partial page of over-read,
+    ratio <= paged_fallback_byte_ratio(live, live + page_size - 1, ...) —
+    i.e. fallback bytes scale with live tokens, never with pool capacity."""
+    per_tok = (head_dim + scale_bytes) if packed else (
+        head_dim * full_bytes_per_elem)
+    full = max(1, live_tokens) * head_dim * full_bytes_per_elem
+    return gathered_tokens * per_tok / full
+
+
 # --------------------------------------------------------------------------
 # Traffic model (what packing buys, in HBM bytes — asserted structurally)
 # --------------------------------------------------------------------------

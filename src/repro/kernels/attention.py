@@ -38,6 +38,19 @@ Per-slot serving lengths: `kv_lens` (one real KV length per grid row)
 replaces the static kv_len/offset pair with an in-kernel scalar read, so a
 continuous-batching decode step — every slot at its own ragged position —
 runs the ragged grid in ONE launch with per-slot causal alignment.
+
+Paged KV (ISSUE 7): with `page_table` the K/V operands are a GLOBAL page
+pool `(num_pages, page_size, KVH, D)` shared by every slot, and the table
+`(B, max_pages)` names which physical page holds each slot's j-th logical
+key block.  The key-block size is pinned to the page size and the KV index
+map gains exactly one lookup — `pt[slot, j]` instead of `slot` — via a
+scalar-prefetch operand (PrefetchScalarGridSpec), so a ragged, paged,
+quantized decode step is STILL one launch: all masking, GQA folding,
+per-slot lengths and in-kernel int8 dequant compose unchanged, because page
+j of a slot holds logical key positions [j*page_size, (j+1)*page_size) and
+the existing kpos/kvl math never needs to know the keys are scattered in
+HBM.  Dead table entries point at page 0 (a reserved trash page), so culled
+blocks stay in-bounds.
 """
 
 from __future__ import annotations
@@ -55,11 +68,16 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
-    q_ref, k_ref, v_ref, *refs,
+    *args,
     nk: int, bq: int, bk: int, scale: float, causal: bool, prefix_len: int,
     q_len: int, offset: int, kv_len: int, quantized: bool, dynamic_len: bool,
-    cache_layout: bool,
+    cache_layout: bool, paged: bool = False,
 ):
+    if paged:
+        # scalar-prefetch page table: consumed entirely by the index maps —
+        # the kernel body never touches it (positions are logical already)
+        args = args[1:]
+    q_ref, k_ref, v_ref, *refs = args
     # refs: [k_scales] [v_scales] [kv_lens] o m l acc
     refs = list(refs)
     ks_ref = refs.pop(0) if quantized else None
@@ -167,6 +185,7 @@ def attention(
     k_scales: jnp.ndarray = None,  # k's layout with D -> 1, f32
     v_scales: jnp.ndarray = None,
     kv_lens: jnp.ndarray = None,   # (BH,) int32 per-grid-row real KV lengths
+    page_table: jnp.ndarray = None,  # (B, max_pages) int32: k/v are the pool
     kv_groups: int = 1,            # query heads per stored K/V head (GQA)
     causal: bool = True,
     prefix_len: int | None = None,  # prefix-LM: bidirectional first keys
@@ -192,9 +211,22 @@ def attention(
     it is ignored when causal=False (everything is visible already).  4-D operands stream the KV cache's native
     (B, T, H, D) layout — the grid row decomposes into (slot, head) inside
     the index maps, so no transposed copy is ever materialized.
+    With `page_table` the k/v (and scale) operands are the PAGE POOL
+    `(num_pages, page_size, KVH, D)` and the logical key stream of slot b is
+    `pool[page_table[b, 0]], pool[page_table[b, 1]], ...` — block_k is pinned
+    to page_size and the KV index map does the one table lookup.
     """
     cache_layout = q.ndim == 4
-    if cache_layout:
+    paged = page_table is not None
+    if paged:
+        if not cache_layout:
+            raise ValueError("page_table requires the (B, Tq, H, D) q layout")
+        b, tq, h, d = q.shape
+        _, page_size, kvh, _ = k.shape
+        assert h == kvh * kv_groups, (q.shape, k.shape, kv_groups)
+        bh = b * h
+        tk = page_table.shape[-1] * page_size  # logical per-slot capacity
+    elif cache_layout:
         b, tq, h, d = q.shape
         _, tk, kvh, _ = k.shape
         assert h == kvh * kv_groups, (q.shape, k.shape, kv_groups)
@@ -211,7 +243,8 @@ def attention(
     if scale is None:
         scale = d ** -0.5
     block_q = min(block_q, tq)
-    block_k = min(block_k, tk)
+    # paged: one key block per page — the block grid IS the page table row
+    block_k = k.shape[1] if paged else min(block_k, tk)
     # cdiv grids, no divisibility contract: the key fringe is masked
     # in-kernel (kpos/kvl on the scores, zeroed V rows) and the ragged
     # query-block rows are clipped by Pallas on the output write
@@ -231,9 +264,20 @@ def attention(
         quantized=quantized,
         dynamic_len=dynamic_len,
         cache_layout=cache_layout,
+        paged=paged,
     )
     g = kv_groups
-    if cache_layout:
+    if paged:
+        # the ONE page-table lookup: logical key block j of slot r // h lives
+        # in physical page pt[r // h, j] of the pool — everything else
+        # (masking, GQA fold, scales layout) is the cache-layout path verbatim
+        q_spec = pl.BlockSpec(
+            (1, block_q, 1, d), lambda r, i, j, pt: (r // h, i, r % h, 0))
+        kv_idx = lambda r, i, j, pt: (pt[r // h, j], 0, (r % h) // g, 0)
+        kv_spec = pl.BlockSpec((1, block_k, 1, d), kv_idx)
+        s_spec = pl.BlockSpec((1, block_k, 1, 1), kv_idx)
+        out_shape = q.shape
+    elif cache_layout:
         # grid row r = slot * H + head; K/V fold the GQA group on top — the
         # cache streams exactly as it sits in HBM
         q_spec = pl.BlockSpec((1, block_q, 1, d), lambda r, i, j: (r // h, i, r % h, 0))
@@ -255,20 +299,40 @@ def attention(
         in_specs += [s_spec, s_spec]
     if dynamic_len:
         operands.append(kv_lens.astype(jnp.int32).reshape(bh, 1))
-        in_specs.append(pl.BlockSpec((1, 1), lambda r, i, j: (r, 0)))
+        lens_idx = (lambda r, i, j, pt: (r, 0)) if paged else (
+            lambda r, i, j: (r, 0))
+        in_specs.append(pl.BlockSpec((1, 1), lens_idx))
+    scratch_shapes = [
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, d), jnp.float32),
+    ]
+    compiler_params = _compat.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+    )
+    if paged:
+        # the page table rides as a scalar-prefetch operand so the index
+        # maps above can read it before the grid's DMAs are issued
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=grid,
+                in_specs=in_specs,
+                out_specs=q_spec,
+                scratch_shapes=scratch_shapes,
+            ),
+            out_shape=jax.ShapeDtypeStruct(out_shape, q.dtype),
+            compiler_params=compiler_params,
+            interpret=interpret,
+        )(page_table.astype(jnp.int32), *operands)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=q_spec,
         out_shape=jax.ShapeDtypeStruct(out_shape, q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, d), jnp.float32),
-        ],
-        compiler_params=_compat.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        scratch_shapes=scratch_shapes,
+        compiler_params=compiler_params,
         interpret=interpret,
     )(*operands)

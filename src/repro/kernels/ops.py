@@ -482,8 +482,8 @@ def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray, *, block_n=2048):
     static_argnames=("causal", "prefix_len", "block_q", "block_k", "kv_groups"),
 )
 def flash_attention(q, k, v, *, k_scales=None, v_scales=None, kv_lens=None,
-                    kv_groups=1, causal=True, prefix_len=None, block_q=128,
-                    block_k=128):
+                    page_table=None, kv_groups=1, causal=True, prefix_len=None,
+                    block_q=128, block_k=128):
     """(BH, Tq, D) x (BHkv, Tk, D) -> (BH, Tq, D).  4-D operands select the
     KV cache's native (B, T, H, D) layout instead — the kernel's index maps
     decompose the grid row into (slot, head), so the cache streams as it
@@ -503,15 +503,22 @@ def flash_attention(q, k, v, *, k_scales=None, v_scales=None, kv_lens=None,
     `prefix_len` relaxes the causal mask over the first prefix_len absolute
     key positions (prefix-LM, e.g. the paligemma patch prefix).
 
+    With `page_table` (B, max_pages) the k/v (and scale) operands are the
+    paged KV POOL (num_pages, page_size, KVH, D): the key-block grid walks
+    the table row and the kernel's KV index map does the one physical-page
+    lookup via scalar prefetch — a ragged, paged, quantized decode step is
+    still exactly one launch.
+
     This is the ONE attention engine: every mask variant (causal, prefix-LM,
-    non-causal), both cache dtypes, and GQA route here under the pallas
-    backend — `models.layers.attention_core` survives only as the xla/ref
-    oracle these launches are pinned against.
+    non-causal), both cache dtypes, GQA, and the paged pool layout route
+    here under the pallas backend — `models.layers.attention_core` survives
+    only as the xla/ref oracle these launches are pinned against.
     """
     return _attention.attention(
         q, k, v, k_scales=k_scales, v_scales=v_scales, kv_lens=kv_lens,
-        kv_groups=kv_groups, causal=causal, prefix_len=prefix_len,
-        block_q=block_q, block_k=block_k, interpret=_interpret(),
+        page_table=page_table, kv_groups=kv_groups, causal=causal,
+        prefix_len=prefix_len, block_q=block_q, block_k=block_k,
+        interpret=_interpret(),
     )
 
 

@@ -146,6 +146,85 @@ def attention_kv_dequant(
 
 
 # --------------------------------------------------------------------------
+# Paged KV (page pool + per-slot page table) oracles
+# --------------------------------------------------------------------------
+
+def gather_pages(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """(num_pages, page_size, H, ...) pool + (B, n) table -> the DENSE logical
+    cache (B, n * page_size, H, ...): slot b's key stream is the
+    concatenation of its table's physical pages, in table order.  This is the
+    ground-truth meaning of a page table — every paged backend must equal the
+    dense path run on this gather."""
+    b, n = page_table.shape
+    gathered = pool[page_table.astype(jnp.int32)]   # (B, n, page, H, ...)
+    return gathered.reshape((b, n * pool.shape[1]) + pool.shape[2:])
+
+
+def attention_paged(
+    q: jnp.ndarray,           # (B, Tq, H, D) — the cache's native layout
+    k_pool: jnp.ndarray,      # (num_pages, page_size, KVH, D)
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, max_pages) int32
+    kv_lens: jnp.ndarray,     # (B * H,) real KV length per grid row
+    *,
+    causal: bool = True,
+    prefix_len: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Paged flash oracle: gather the table into the dense logical cache,
+    expand GQA, and run the full-materialization per-row-length attention.
+    Returns q's (B, Tq, H, D) layout."""
+    b, tq, h, d = q.shape
+    k = gather_pages(k_pool, page_table)            # (B, S, KVH, D)
+    v = gather_pages(v_pool, page_table)
+    kvh = k.shape[2]
+    groups = h // kvh
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, tq, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * kvh, -1, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * kvh, -1, d)
+    if groups > 1:
+        kf = jnp.repeat(kf, groups, axis=0)
+        vf = jnp.repeat(vf, groups, axis=0)
+    out = attention_lens(qf, kf, vf, kv_lens, causal=causal,
+                         prefix_len=prefix_len, scale=scale)
+    return jnp.moveaxis(out.reshape(b, h, tq, d), 1, 2)
+
+
+def attention_paged_kv_dequant(
+    q: jnp.ndarray,            # (B, Tq, H, D)
+    k_values: jnp.ndarray,     # (num_pages, page_size, KVH, D) int8
+    k_scales: jnp.ndarray,     # (num_pages, page_size, KVH, 1) f32
+    v_values: jnp.ndarray,
+    v_scales: jnp.ndarray,
+    page_table: jnp.ndarray,
+    kv_lens: jnp.ndarray,
+    *,
+    causal: bool = True,
+    prefix_len: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Exact-dequant oracle for the paged int8 pool: gather value AND scale
+    pages through the same table (they travel in lockstep), dequantize, and
+    defer to the paged oracle above."""
+    k = (gather_pages(k_values, page_table).astype(jnp.float32)
+         * gather_pages(k_scales, page_table).astype(jnp.float32))
+    v = (gather_pages(v_values, page_table).astype(jnp.float32)
+         * gather_pages(v_scales, page_table).astype(jnp.float32))
+    b, s, kvh, d = k.shape
+    h = q.shape[2]
+    groups = h // kvh
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, q.shape[1], d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * kvh, s, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * kvh, s, d)
+    if groups > 1:
+        kf = jnp.repeat(kf, groups, axis=0)
+        vf = jnp.repeat(vf, groups, axis=0)
+    out = attention_lens(qf, kf, vf, kv_lens, causal=causal,
+                         prefix_len=prefix_len, scale=scale)
+    return jnp.moveaxis(out.reshape(b, h, q.shape[1], d), 1, 2)
+
+
+# --------------------------------------------------------------------------
 # RWKV6 "Finch" WKV recurrence (data-dependent per-channel decay)
 # --------------------------------------------------------------------------
 

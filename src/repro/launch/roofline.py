@@ -224,9 +224,9 @@ def analytic_hbm_bytes(cfg, cell, chips: int, microbatches: int = 1,
     return decode_byte_terms(cfg, cell, chips)["total"]
 
 
-def decode_byte_terms(cfg, cell, chips: int = 1) -> dict:
+def decode_byte_terms(cfg, cell, chips: int = 1, kv_page_size: int = 0) -> dict:
     """Per-chip HBM bytes of ONE decode step, split into the roofline's
-    byte terms: {"weights", "kv", "act", "total"}.
+    byte terms: {"weights", "kv", "page_table", "act", "total"}.
 
     This is the combined-quantization model the quantized bench asserts
     against: `cfg.weight_dtype="int8"` reprices the projection-weight stream
@@ -235,6 +235,13 @@ def decode_byte_terms(cfg, cell, chips: int = 1) -> dict:
     KV-cache read at 1 + 4/hd B/element (per-(token, head) f32 scales,
     core.quant.quantize_kv).  The two compose: the decode step's two
     dominant byte terms both stream packed.
+
+    kv_page_size > 0 models the PAGED cache instead: the KV read touches
+    only the LIVE pages — cell.seq_len rounded up to page granularity, never
+    the pool's capacity — plus one page-table term (the (B, n_pages) int32
+    rows the kernel's scalar prefetch reads per layer).  The page-size
+    rounding is the whole byte overhead of paging; the page-table term is
+    4 bytes per 2*kv*hd*page_size-byte page, i.e. noise.
     """
     d, hd = cfg.d_model, cfg.hd
     kv, L = cfg.n_kv, cfg.n_layers
@@ -245,6 +252,12 @@ def decode_byte_terms(cfg, cell, chips: int = 1) -> dict:
     kv_b = (kv_int8_bytes(hd)
             if getattr(cfg, "kv_cache_dtype", "model") == "int8" else dt)
     cache = L * cell.global_batch * cell.seq_len * 2 * kv * hd * kv_b / chips
+    page_table = 0.0
+    if kv_page_size and cfg.family in ("dense", "moe", "vlm"):
+        n_live = -(-cell.seq_len // kv_page_size)
+        cache = (L * cell.global_batch * n_live * kv_page_size
+                 * 2 * kv * hd * kv_b / chips)
+        page_table = L * cell.global_batch * n_live * 4.0 / chips
     if cfg.family == "rwkv":
         nh = d // cfg.rwkv.head_dim
         cache = L * cell.global_batch * nh * cfg.rwkv.head_dim ** 2 * 4.0 / chips
@@ -257,8 +270,8 @@ def decode_byte_terms(cfg, cell, chips: int = 1) -> dict:
             + n_occ * cell.global_batch * cell.seq_len * 2 * kv * hd * dt
         ) / chips
     act = layers * cell.global_batch * unit * dt / chips
-    return {"weights": weights, "kv": cache, "act": act,
-            "total": weights + cache + act}
+    return {"weights": weights, "kv": cache, "page_table": page_table,
+            "act": act, "total": weights + cache + page_table + act}
 
 
 @dataclasses.dataclass

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blas
+from repro.launch import paging
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tf
 from repro.models.registry import get_config
@@ -53,7 +54,8 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
           gen_lens: Optional[Sequence[int]] = None,
           prompts: Optional[Sequence[np.ndarray]] = None,
           quantize: str = "none", kv_cache: str = "model",
-          prefill_chunk: Optional[int] = None):
+          prefill_chunk: Optional[int] = None,
+          kv_page_size: Optional[int] = None, prefix_reuse: bool = True):
     """Serve `requests` synthetic prompts through greedy decode.
 
     quantize="int8" packs every projection weight with block-scaled int8
@@ -87,6 +89,19 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
     Under --backend pallas the batched decode routes its
     projections through the fused batched kernels: every (B, 1, d) matmul is
     one bgemv launch over the request batch with broadcast weights.
+
+    kv_page_size: store the KV cache PAGED — a global pool of
+    `kv_page_size`-token pages plus a per-slot page table — instead of the
+    dense (batch, cache_len) buffers.  Under the continuous scheduler,
+    admission becomes page-pointer writes: the prompt is hashed page by page
+    against previously admitted prompts (prefix_reuse, default on), a
+    matched prefix is backed by the SAME physical pages with a refcount
+    bump, only the unshared suffix is grafted into the pool, and the first
+    divergent write copies-on-write exactly one page.  Freed slots return
+    their pages to a free list.  Greedy tokens are bit-identical to the
+    dense cache under both schedulers; stats gain `pages_live`,
+    `pages_shared`, `cow_copies` and `paged_capacity_multiplier` (logical /
+    physical pages — >1 exactly when prefixes are shared).
 
     Returns a stats dict: completed/tokens/prefills/decode_steps counters,
     tok_s, mean live-slot `occupancy`, per-request `ttft` (seconds to first
@@ -127,6 +142,14 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
     if prefill_chunk is not None and scheduler != "continuous":
         raise ValueError("prefill_chunk interleaves admission chunks with "
                          "decode steps and needs --scheduler continuous")
+    if kv_page_size is not None:
+        if kv_page_size < 1:
+            raise ValueError(f"kv_page_size must be >= 1, got {kv_page_size}")
+        if cfg.family not in tf.SLOT_CACHE_FAMILIES:
+            raise ValueError(
+                f"paged KV cache supports {tf.SLOT_CACHE_FAMILIES} families "
+                f"(per-slot KV caches); {cfg.family!r} keeps the dense cache"
+            )
     with blas.use_backend(backend):
         if scheduler == "continuous":
             if cfg.family not in tf.SLOT_CACHE_FAMILIES:
@@ -136,18 +159,26 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
                     f"--scheduler batch"
                 )
             stats = _serve_continuous(cfg, prompts, list(gen_lens), batch, seed,
-                                      eos, quantize, prefill_chunk)
+                                      eos, quantize, prefill_chunk,
+                                      page_size=kv_page_size,
+                                      prefix_reuse=prefix_reuse)
         elif scheduler == "batch":
             stats = _serve_batch(cfg, prompts, list(gen_lens), batch, seed, eos,
-                                 quantize)
+                                 quantize, page_size=kv_page_size)
         else:
             raise ValueError(f"scheduler must be 'continuous' or 'batch', got {scheduler!r}")
     if verbose:
+        paged_info = ""
+        if "pages_live" in stats:
+            paged_info = (f", pages {stats['pages_live']} live / "
+                          f"{stats['pages_shared']} shared, "
+                          f"{stats['cow_copies']} CoW, capacity "
+                          f"x{stats['paged_capacity_multiplier']:.2f}")
         print(f"[serve] {arch} ({scheduler}): {stats['completed']} requests, "
               f"{stats['tokens']} tokens in {stats['elapsed_s']:.2f}s -> "
               f"{stats['tok_s']:.1f} tok/s ({stats['prefills']} prefills, "
               f"{stats['decode_steps']} decode steps, "
-              f"occupancy {stats['occupancy']:.2f})", flush=True)
+              f"occupancy {stats['occupancy']:.2f}{paged_info})", flush=True)
     return stats
 
 
@@ -228,7 +259,7 @@ def _quantize_params(params, quantize: str):
 
 
 def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
-                      prefill_chunk=None):
+                      prefill_chunk=None, page_size=None, prefix_reuse=True):
     """Slot-level admission: finished sequences free their slot immediately;
     each free slot prefills the next FIFO request into the shared cache.
 
@@ -237,7 +268,14 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     prefill step (positions continue at the mini cache's pos), and every
     chunk boundary is a decode opportunity for the live slots — one long
     admission costs each live slot at most one chunk of prefill work between
-    its tokens instead of the whole prompt."""
+    its tokens instead of the whole prompt.
+
+    With `page_size`, the slot cache is the PAGED pool: admission writes the
+    slot's page-table row (matched shared prefix pages + fresh pages) and
+    grafts only the unshared suffix tokens; a finished slot's row is
+    repointed at the trash page and its pages go back to the free list.  The
+    decode step itself is unchanged — still one masked launch over the slot
+    grid, reading and writing straight through the page table."""
     nreq = len(prompts)
     cache_len = _cache_len(cfg, prompts, gen_lens)
     rng = np.random.default_rng(seed + 1)
@@ -246,8 +284,26 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     # the admission prefill's zero template is reused every round: no donation
     prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg))
     decode_fn = jax.jit(steps_lib.make_decode_step_slots(cfg), donate_argnums=(2,))
-    admit_fn = jax.jit(_admit_step, donate_argnums=(0, 3))
     mini_zero = tf.init_cache(cfg, batch, cache_len)
+
+    paged = page_size is not None
+    if paged:
+        max_pages = -(-cache_len // page_size)
+        # worst case (no sharing) needs batch * max_pages live pages and
+        # sharing only ever lowers that — each CoW allocation is paid for by
+        # the >= 1 page its share saved — so one slack page per slot is
+        # strictly conservative; +1 for the reserved trash page.
+        num_pages = 1 + batch * (max_pages + 1)
+        alloc = paging.PageAllocator(num_pages, page_size)
+        slot_pages = [[] for _ in range(batch)]
+        graft_fn = jax.jit(tf.graft_pages, donate_argnums=(0,))
+        copy_fn = jax.jit(tf.copy_pages, donate_argnums=(0,))
+        # vlm prompts carry per-admission random patch embeds in front of
+        # the tokens, so equal token ids do NOT mean equal KV: never share
+        share = prefix_reuse and cfg.family != "vlm"
+        n_prefix = cfg.n_prefix if cfg.family == "vlm" else 0
+    else:
+        admit_fn = jax.jit(_admit_step, donate_argnums=(0, 3))
 
     # compile outside the timed region (throwaway buffers), so the stats
     # measure scheduling, not jit.  Ragged prompts still trace one extra
@@ -255,15 +311,28 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     warm_in = {"tokens": jnp.zeros((batch, len(prompts[0])), jnp.int32)}
     warm_in.update(_prefill_extras(cfg, rng, batch, 0))
     warm_tok0, warm_mini = prefill_fn(params, warm_in, mini_zero)
-    warm_cache, warm_tok = admit_fn(
-        tf.init_cache(cfg, batch, cache_len, per_slot=True), warm_mini,
-        jnp.zeros(batch, jnp.int32) - 1, jnp.zeros((batch, 1), jnp.int32), warm_tok0)
+    if paged:
+        warm_cache = tf.init_cache(cfg, batch, cache_len, per_slot=True,
+                                   page_size=page_size, num_pages=num_pages)
+        zc = jnp.zeros((batch * (len(prompts[0]) + n_prefix),), jnp.int32)
+        warm_cache = graft_fn(warm_cache, warm_mini, zc, zc, zc, zc)
+        warm_cache = copy_fn(warm_cache, jnp.zeros((1,), jnp.int32),
+                             jnp.zeros((1,), jnp.int32))
+        warm_tok = jnp.zeros((batch, 1), jnp.int32)
+    else:
+        warm_cache, warm_tok = admit_fn(
+            tf.init_cache(cfg, batch, cache_len, per_slot=True), warm_mini,
+            jnp.zeros(batch, jnp.int32) - 1, jnp.zeros((batch, 1), jnp.int32), warm_tok0)
     warm_tok, warm_cache = decode_fn(params, warm_tok, warm_cache, jnp.zeros(batch, bool))
     jax.block_until_ready(warm_tok)
     del warm_mini, warm_cache, warm_tok, warm_tok0
 
     pending = collections.deque(enumerate(prompts))  # FIFO: popleft serves arrival order
-    cache = tf.init_cache(cfg, batch, cache_len, per_slot=True)
+    if paged:
+        cache = tf.init_cache(cfg, batch, cache_len, per_slot=True,
+                              page_size=page_size, num_pages=num_pages)
+    else:
+        cache = tf.init_cache(cfg, batch, cache_len, per_slot=True)
     # the token block and active mask live on device; the host only touches
     # rows on admission/finish events, so a steady decode step has no H2D
     # transfer (same as the batch-at-a-time loop)
@@ -273,6 +342,19 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     slot_left = np.zeros(batch, np.int64)
     active = np.zeros(batch, bool)
     stats = _new_stats(nreq)
+    if paged:
+        stats.update({"kv_page_size": page_size, "pages_live": 0,
+                      "pages_shared": 0, "paged_capacity_multiplier": 0.0,
+                      "cow_copies": 0})
+
+    def sample_pages():
+        """Fold the allocator's current occupancy into the run peaks."""
+        stats["pages_live"] = max(stats["pages_live"], alloc.pages_live())
+        stats["pages_shared"] = max(stats["pages_shared"], alloc.pages_shared())
+        stats["paged_capacity_multiplier"] = max(
+            stats["paged_capacity_multiplier"], alloc.capacity_multiplier())
+        stats["cow_copies"] = alloc.cow_copies
+
     occ = []
     t0 = time.time()
     # inter-token stall trackers for LIVE slots: wall clock of the previous
@@ -297,6 +379,7 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
             stats["max_stall_prefill_tokens"], prefill_gap[0])
         prefill_gap[0] = 0
         finished = False
+        freed_rows = []
         for s in range(batch):
             if not active[s]:
                 continue
@@ -305,6 +388,15 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                 active[s] = False
                 slot_req[s] = -1
                 finished = True
+                if paged:
+                    alloc.release(slot_pages[s])
+                    slot_pages[s] = []
+                    freed_rows.append(s)
+        if freed_rows:
+            # repoint dead rows at the trash page so the frozen slots' masked
+            # decode writes can never land in a recycled page
+            cache["page_table"] = cache["page_table"].at[
+                jnp.asarray(freed_rows)].set(paging.TRASH_PAGE)
         if finished:
             active_dev = jnp.asarray(active)
 
@@ -350,7 +442,53 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                 stats["prefills"] += 1
                 if active.any():
                     prefill_gap[0] += min(csize, plen - start)
-            cache, tok_dev = admit_fn(cache, mini, jnp.asarray(slots), tok_dev, tok0)
+            if paged:
+                # page-pointer admission: match the prompt against registered
+                # prefixes, take fresh pages for the rest, and graft ONLY the
+                # unshared suffix tokens out of the mini cache — matched
+                # pages are already resident in the pool.
+                total = plen + n_prefix
+                max_pages_row = cache["page_table"].shape[1]
+                rows_l, toks_l, pages_l, offs_l = [], [], [], []
+                table_rows = np.zeros((len(group), max_pages_row), np.int64)
+                for i, (s, rid, prompt) in enumerate(group):
+                    # covers the prompt + this request's own decode writes; a
+                    # budget <= 1 request never decodes, so clamping to the
+                    # table width never drops a page that would be written
+                    need = min(-(-(total + max(1, gen_lens[rid])) // page_size),
+                               max_pages_row)
+                    matched, covered = alloc.match_prefix(prompt) if share else ([], 0)
+                    # partial-page keys are exact-tail, so a matched partial
+                    # page always covers the whole prompt: the graft below
+                    # never appends into a shared page
+                    assert covered == total or covered % page_size == 0, (covered, total)
+                    alloc.retain(matched)
+                    plist = matched + alloc.alloc(need - len(matched))
+                    slot_pages[s] = plist
+                    table_rows[i, :len(plist)] = plist
+                    for p in range(covered, total):
+                        rows_l.append(i)
+                        toks_l.append(p)
+                        pages_l.append(plist[p // page_size])
+                        offs_l.append(p % page_size)
+                    if share:
+                        alloc.register_prefix(prompt, plist[:-(-plen // page_size)])
+                srows = jnp.asarray([s for s, _, _ in group])
+                cache["page_table"] = cache["page_table"].at[srows].set(
+                    jnp.asarray(table_rows, jnp.int32))
+                cache["pos"] = cache["pos"].at[srows].set(total)
+                # pad the graft to one fixed bucket per prompt length (the
+                # padding re-writes mini token (0, 0) into the trash page)
+                # so ragged admission counts don't retrace the jit
+                pad = batch * total - len(rows_l)
+                coords = [jnp.asarray(c + [0] * pad, jnp.int32)
+                          for c in (rows_l, toks_l, pages_l, offs_l)]
+                cache = graft_fn(cache, mini, *coords)
+                safe = jnp.asarray(np.where(slots < 0, batch, slots))
+                tok_dev = tok_dev.at[safe].set(tok0, mode="drop")
+                sample_pages()
+            else:
+                cache, tok_dev = admit_fn(cache, mini, jnp.asarray(slots), tok_dev, tok0)
             tok0_np = np.asarray(tok0)[:, 0]  # sync BEFORE stamping TTFT
             t_first = time.time() - t0
             for i, (s, rid, _) in enumerate(group):
@@ -360,6 +498,31 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                     active[s] = True
                     slot_req[s] = rid
                     slot_left[s] = gen_lens[rid] - 1
+            if paged:
+                for i, (s, rid, _) in enumerate(group):
+                    plist = slot_pages[s]
+                    if not active[s]:
+                        # finished on its prefill token: nothing will ever be
+                        # decoded into these pages
+                        alloc.release(plist)
+                        slot_pages[s] = []
+                        cache["page_table"] = cache["page_table"].at[s].set(
+                            paging.TRASH_PAGE)
+                        continue
+                    # the first decode write lands at pos == total: resolve
+                    # the write hazard on that page ONCE here instead of
+                    # checking every step — copy-on-write if another slot
+                    # shares it, unpublish it if we registered its tail
+                    widx = (plen + n_prefix) // page_size
+                    p = plist[widx]
+                    if alloc.shared(p):
+                        newp = alloc.cow(p)
+                        cache = copy_fn(cache, jnp.asarray([p]), jnp.asarray([newp]))
+                        plist[widx] = newp
+                        cache["page_table"] = cache["page_table"].at[s, widx].set(newp)
+                    else:
+                        alloc.invalidate(p)
+                sample_pages()
             # refresh the device mask per GROUP (not per round): a later
             # group's chunk-boundary decode must advance this group's slots
             active_dev = jnp.asarray(active)
@@ -369,9 +532,16 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     return _finalize(stats, occ, t0)
 
 
-def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none"):
+def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
+                 page_size=None):
     """Batch-at-a-time baseline: a finished sequence's slot idles until the
-    whole batch drains.  The queue is still served strictly FIFO."""
+    whole batch drains.  The queue is still served strictly FIFO.
+
+    page_size stores each group's KV paged (fresh pages per slot, released
+    when the group drains).  No prefix sharing here — all slots prefill into
+    their pages in one launch, so there is nothing admitted "earlier" to
+    share with; the capacity multiplier stays 1.0 by construction and the
+    continuous scheduler is where dedupe pays."""
     nreq = len(prompts)
     prompt_len = len(prompts[0])
     if any(len(p) != prompt_len for p in prompts):
@@ -388,17 +558,41 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none"):
     prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg), donate_argnums=(2,))
     decode_fn = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(2,))
 
+    paged = page_size is not None
+    if paged:
+        max_pages = -(-cache_len // page_size)
+        num_pages = 1 + batch * max_pages
+
+    def group_cache():
+        """Fresh cache for one group: every slot (padding rows included —
+        they decode garbage until the drain) gets its own page run."""
+        if not paged:
+            return tf.init_cache(cfg, batch, cache_len, enc_frames=enc)
+        cache = tf.init_cache(cfg, batch, cache_len, enc_frames=enc,
+                              page_size=page_size, num_pages=num_pages)
+        galloc = paging.PageAllocator(num_pages, page_size)
+        table = np.stack([galloc.alloc(max_pages) for _ in range(batch)])
+        cache["page_table"] = jnp.asarray(table, jnp.int32)
+        stats["pages_live"] = max(stats["pages_live"], galloc.pages_live())
+        stats["paged_capacity_multiplier"] = max(
+            stats["paged_capacity_multiplier"], galloc.capacity_multiplier())
+        return cache
+
+    pending = collections.deque(enumerate(prompts))
+    stats = _new_stats(nreq)
+    if paged:
+        stats.update({"kv_page_size": page_size, "pages_live": 0,
+                      "pages_shared": 0, "paged_capacity_multiplier": 0.0,
+                      "cow_copies": 0})
+
     # compile outside the timed region, mirroring the continuous scheduler
     warm_in = {"tokens": jnp.zeros((batch, prompt_len), jnp.int32)}
     warm_in.update(_prefill_extras(cfg, rng, batch, enc))
-    warm_tok, warm_cache = prefill_fn(params, warm_in,
-                                      tf.init_cache(cfg, batch, cache_len, enc_frames=enc))
+    warm_tok, warm_cache = prefill_fn(params, warm_in, group_cache())
     warm_tok, warm_cache = decode_fn(params, warm_tok, warm_cache)
     jax.block_until_ready(warm_tok)
     del warm_cache, warm_tok
 
-    pending = collections.deque(enumerate(prompts))
-    stats = _new_stats(nreq)
     occ = []
     t0 = time.time()
 
@@ -410,7 +604,7 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none"):
         )
         batch_in = {"tokens": jnp.asarray(prompt_block)}
         batch_in.update(_prefill_extras(cfg, rng, batch, enc))
-        cache = tf.init_cache(cfg, batch, cache_len, enc_frames=enc)
+        cache = group_cache()
         tok, cache = prefill_fn(params, batch_in, cache)
         stats["prefills"] += 1
         tok_np = np.asarray(tok)[:, 0]  # sync BEFORE stamping TTFT
@@ -468,11 +662,23 @@ def main():
                          "interleaved with decode steps (0 = unchunked) — "
                          "bounds the inter-token stall a long admission "
                          "inflicts on live slots")
+    ap.add_argument("--kv-page-size", type=int, default=0,
+                    help="store the KV cache paged: a global pool of pages "
+                         "of this many tokens + a per-slot page table "
+                         "(0 = dense per-slot cache).  Freed slots return "
+                         "their pages; under --scheduler continuous a "
+                         "repeated prompt prefix is stored once")
+    ap.add_argument("--prefix-reuse", default="on", choices=("on", "off"),
+                    help="paged continuous scheduler: hash admitted prompts "
+                         "page by page and back a matched prefix with the "
+                         "SAME physical pages (copy-on-write on divergence)")
     args = ap.parse_args()
     serve(args.arch, args.variant, args.requests, args.batch, args.prompt_len,
           args.gen, backend=args.backend, scheduler=args.scheduler,
           quantize=args.quantize, kv_cache=args.kv_cache,
-          prefill_chunk=args.prefill_chunk or None)
+          prefill_chunk=args.prefill_chunk or None,
+          kv_page_size=args.kv_page_size or None,
+          prefix_reuse=args.prefix_reuse == "on")
 
 
 if __name__ == "__main__":

@@ -363,6 +363,40 @@ def _cache_write_kv(bufs: tuple, qt: "quant.QuantizedTensor", pos: jnp.ndarray) 
     return write(vbuf, sbuf, *new, pos)
 
 
+def _paged_write_coords(page_table: jnp.ndarray, pos, t: int,
+                        page_size: int) -> tuple:
+    """(pages, offs) flat scatter coordinates for writing a (B, T) token
+    block through the page table: token (b, i) at logical position pos_b + i
+    lands in physical page `page_table[b, (pos_b + i) // page_size]` at row
+    `(pos_b + i) % page_size`.  Scalar pos broadcasts (prefill / batch
+    decode); (B,) pos is the ragged slot grid.  Dead table entries point at
+    the trash page, so frozen inactive slots scatter harmlessly; the clip
+    keeps even an at-capacity frozen position in-bounds."""
+    b = page_table.shape[0]
+    posk = jnp.asarray(pos, jnp.int32).reshape(-1, 1) + jnp.arange(t, dtype=jnp.int32)[None]
+    posk = jnp.broadcast_to(posk, (b, t))
+    pages = jnp.take_along_axis(
+        page_table.astype(jnp.int32), posk // page_size, axis=1, mode="clip")
+    return pages.reshape(-1), (posk % page_size).reshape(-1)
+
+
+def _paged_cache_write(buf: jnp.ndarray, new: jnp.ndarray, pages, offs) -> jnp.ndarray:
+    """Scatter `new` (B, T, H, ...) into the page POOL `buf`
+    (num_pages, page_size, H, ...) at the flat (pages, offs) coordinates."""
+    flat = new.reshape((-1,) + new.shape[2:])
+    return buf.at[pages, offs].set(flat.astype(buf.dtype))
+
+
+def _paged_cache_write_kv(bufs: tuple, qt: "quant.QuantizedTensor",
+                          pages, offs) -> tuple:
+    """Paged analog of `_cache_write_kv`: packed int8 values AND their
+    per-(token, head) scales scatter through the SAME page-table coordinates,
+    so a value row can never land in the pool without its scale."""
+    vbuf, sbuf = bufs
+    return (_paged_cache_write(vbuf, qt.values, pages, offs),
+            _paged_cache_write(sbuf, qt.scales, pages, offs))
+
+
 def _flash_eligible(cfg: "AttnConfig") -> bool:
     """ONE attention engine under the pallas backend: every mask variant
     (causal, prefix-LM, non-causal), both cache dtypes, and GQA lower to
@@ -383,7 +417,7 @@ def _expand_kv_lens(pos, t: int, b: int, h: int) -> jnp.ndarray:
 
 def _flash_cache_attention(q, kv, vv, pos, t: int, groups: int, *,
                            causal: bool = True, prefix_len=None,
-                           ks=None, vs=None):
+                           ks=None, vs=None, page_table=None):
     """Attention over the KV cache via the flash Pallas kernel.
 
     q (B, T, H, hd); kv/vv (B, S, KVH, hd) cache buffers — dense bf16/f32,
@@ -398,12 +432,18 @@ def _flash_cache_attention(q, kv, vv, pos, t: int, groups: int, *,
     `causal`/`prefix_len` select the mask in-kernel (satellite fix: the old
     packed path hardcoded causal=True and eligibility-gated everything
     else out to the dequant fallback).
+
+    With `page_table` (B, max_pages) the kv/vv (and ks/vs) operands are the
+    paged POOL (num_pages, page_size, KVH, ...) and the kernel's KV index
+    map does the one table lookup — ragged + paged + quantized is still ONE
+    launch.
     """
     b, tq, h, hd = q.shape
     lens = _expand_kv_lens(pos, t, b, h)
     from repro.kernels import ops
     out = ops.flash_attention(q, kv, vv, k_scales=ks, v_scales=vs,
-                              kv_lens=lens, kv_groups=groups, causal=causal,
+                              kv_lens=lens, page_table=page_table,
+                              kv_groups=groups, causal=causal,
                               prefix_len=prefix_len)
     return out.astype(q.dtype)
 
@@ -496,7 +536,69 @@ def attention_layer(
     out = None
     if cache is not None:
         pos = cache["pos"]
-        if cache["k"].dtype == jnp.int8:
+        page_table = cache.get("page_table")
+        if page_table is not None:
+            # paged KV (ISSUE 7): cache["k"]/["v"] are the GLOBAL page pool
+            # (num_pages, page_size, KVH, ...) shared by every slot, and the
+            # (B, max_pages) table names each slot's logical key blocks.
+            # Writes scatter through the table (values + scales in lockstep
+            # for int8); the flash read does the same lookup inside its KV
+            # index map, so ragged + paged + quantized stays ONE launch.
+            page_size = cache["k"].shape[1]
+            capacity = page_table.shape[1] * page_size
+            pages, offs = _paged_write_coords(page_table, pos, t, page_size)
+            quantized = cache["k"].dtype == jnp.int8
+            if quantized:
+                kq, vq = quant.quantize_kv(k), quant.quantize_kv(v)
+                ck, cks = _paged_cache_write_kv(
+                    (cache["k"], cache["k_scale"]), kq, pages, offs)
+                cv, cvs = _paged_cache_write_kv(
+                    (cache["v"], cache["v_scale"]), vq, pages, offs)
+                new_cache = {"k": ck, "v": cv, "k_scale": cks,
+                             "v_scale": cvs, "pos": pos + t}
+            else:
+                ck = _paged_cache_write(cache["k"], k, pages, offs)
+                cv = _paged_cache_write(cache["v"], v, pages, offs)
+                cks = cvs = None
+                new_cache = {"k": ck, "v": cv, "pos": pos + t}
+            if _flash_eligible(cfg):
+                out = _flash_cache_attention(q, ck, cv, pos, t, groups,
+                                             causal=cfg.causal,
+                                             prefix_len=prefix_len,
+                                             ks=cks, vs=cvs,
+                                             page_table=page_table)
+            else:
+                # xla/ref fallback: gather the LIVE pages only — the pool
+                # holds every slot's pages, so reading it whole would scale
+                # fallback bytes with POOL capacity instead of live tokens
+                # (satellite fix; the ratio guard pins exactly that)
+                live = _live_kv_len(pos, t, capacity)
+                n_live = -(-live // page_size)
+                gathered = n_live * page_size
+                ratio = quant.paged_fallback_byte_ratio(
+                    live, gathered, hd, packed=quantized)
+                bound = quant.paged_fallback_byte_ratio(
+                    live, live + page_size - 1, hd, packed=quantized)
+                assert ratio <= bound, (
+                    f"paged fallback gathered {gathered} tokens for "
+                    f"{live} live ones (page_size={page_size}): bytes must "
+                    f"scale with live tokens, never the pool"
+                )
+                pts = page_table[:, :n_live].astype(jnp.int32)
+
+                def gather(pool):
+                    return pool[pts].reshape((b, gathered) + pool.shape[2:])
+
+                if quantized:
+                    k_full = quant.dequantize_kv(
+                        gather(ck)[:, :live], gather(cks)[:, :live], x.dtype)
+                    v_full = quant.dequantize_kv(
+                        gather(cv)[:, :live], gather(cvs)[:, :live], x.dtype)
+                else:
+                    k_full = gather(ck)[:, :live]
+                    v_full = gather(cv)[:, :live]
+            q_offset = pos
+        elif cache["k"].dtype == jnp.int8:
             # int8 KV cache: block-scaled packed storage (core.quant
             # per-(token, head) scales), values + scales scattered in
             # lockstep.  Halves the decode-cell attention byte term (§Perf).

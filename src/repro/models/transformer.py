@@ -243,6 +243,10 @@ def forward(params, batch, cfg: ModelConfig, cache=None):
 
     if cfg.family in ("dense", "moe", "vlm"):
         pos = cache["pos"] if cache is not None else None
+        # one page table serves every layer: the layer scan slices the pool's
+        # leading layer axis, while the table (pure logical->physical routing)
+        # broadcasts into each layer's cache dict exactly like pos
+        page_table = cache.get("page_table") if cache is not None else None
         ckeys = ()
         if cache is not None:
             ckeys = ("k", "v") + (("k_scale", "v_scale") if "k_scale" in cache else ())
@@ -250,12 +254,18 @@ def forward(params, batch, cfg: ModelConfig, cache=None):
 
         def body(lp, x, lc):
             lcc = None if lc is None else {**lc, "pos": pos}
+            if lcc is not None and page_table is not None:
+                lcc["page_table"] = page_table
             x, nc, aux = dense_block(lp, x, cfg, positions=positions, cache=lcc, prefix_len=prefix_len)
             nc = None if nc is None else {k_: nc[k_] for k_ in ckeys}
             return x, nc, aux
 
         x, aux, new_scan = _scan_blocks(params["layers"], x, body, cfg, scan_cache)
         new_cache = None if cache is None else {**new_scan, "pos": pos + t}
+        if new_cache is not None and page_table is not None:
+            # table updates are host-side page-pointer writes (admission /
+            # CoW); the jit'd step passes it through untouched
+            new_cache["page_table"] = page_table
     elif cfg.family == "rwkv":
         pos = cache["pos"] if cache is not None else None
         scan_cache = None if cache is None else {"tm": cache["tm"], "cm": cache["cm"]}
@@ -485,12 +495,23 @@ SLOT_CACHE_FAMILIES = ("dense", "moe", "vlm")
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_frames: int = 0,
-               per_slot: bool = False):
+               per_slot: bool = False, page_size: int = 0,
+               num_pages: Optional[int] = None):
     """Allocate the decode cache pytree (zeros).
 
     per_slot=True allocates a (batch,)-vector "pos" instead of a scalar: each
     slot tracks its own sequence position so finished sequences can be
     replaced without draining the rest of the batch (continuous batching).
+
+    page_size > 0 allocates the PAGED representation instead of the dense
+    per-slot buffers (dense/moe/vlm families): a global page pool
+    (n_layers, num_pages, page_size, KVH, ...) — int8 value pages with
+    lockstep f32 scale pages when kv_cache_dtype == "int8" — plus one
+    (batch, ceil(max_len / page_size)) int32 page table whose entries start
+    at the reserved trash page 0.  num_pages defaults to full dense-
+    equivalent capacity + the trash page, so a no-sharing run can never
+    exhaust the pool; the host allocator (launch.paging) is what turns
+    shared prefixes into extra effective capacity.
     """
     dt = cfg.jdtype
     kv, hd = cfg.n_kv, cfg.hd
@@ -499,6 +520,29 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_frames: int = 0,
             f"per-slot cache supports families {SLOT_CACHE_FAMILIES}, got {cfg.family!r}"
         )
     pos0 = jnp.zeros((batch,), jnp.int32) if per_slot else jnp.zeros((), jnp.int32)
+    if page_size:
+        if cfg.family not in SLOT_CACHE_FAMILIES:
+            raise ValueError(
+                f"paged KV cache supports families {SLOT_CACHE_FAMILIES}, "
+                f"got {cfg.family!r}"
+            )
+        max_pages = -(-max_len // page_size)
+        if num_pages is None:
+            num_pages = 1 + batch * max_pages
+        pool = {
+            "page_table": jnp.zeros((batch, max_pages), jnp.int32),
+            "pos": pos0,
+        }
+        shape = (cfg.n_layers, num_pages, page_size, kv, hd)
+        if cfg.kv_cache_dtype == "int8":
+            pool["k"] = jnp.zeros(shape, jnp.int8)
+            pool["v"] = jnp.zeros(shape, jnp.int8)
+            pool["k_scale"] = jnp.zeros(shape[:-1] + (1,), jnp.float32)
+            pool["v_scale"] = jnp.zeros(shape[:-1] + (1,), jnp.float32)
+        else:
+            pool["k"] = jnp.zeros(shape, dt)
+            pool["v"] = jnp.zeros(shape, dt)
+        return pool
     if cfg.family in ("dense", "moe", "vlm"):
         if cfg.kv_cache_dtype == "int8":
             # block-scaled packed KV storage (core.quant.quantize_kv):
@@ -583,6 +627,41 @@ def insert_slots_cache(cache: dict, mini: dict, slots: jnp.ndarray) -> dict:
     new["pos"] = cache["pos"].at[slots].set(
         jnp.full(slots.shape, mini["pos"], cache["pos"].dtype), mode="drop"
     )
+    return new
+
+
+def graft_pages(cache: dict, mini: dict, rows: jnp.ndarray, toks: jnp.ndarray,
+                pages: jnp.ndarray, offs: jnp.ndarray) -> dict:
+    """Graft admission-prefill tokens into the paged pool, token by token.
+
+    `cache` is a paged cache (init_cache(..., page_size=...)); `mini` is the
+    dense scalar-pos mini cache admission prefilled into (insert_slots_cache's
+    source).  Token i copies mini row `rows[i]`, position `toks[i]` — every
+    layer at once, values and scale pages in lockstep — into pool page
+    `pages[i]` at row `offs[i]`.  The host only enumerates the NON-SHARED
+    suffix of each admitted prompt here: tokens covered by a matched prefix
+    are pure page-table pointer writes and never touch the pool — that is
+    the structural difference from the dense `insert_slots_cache` scatter,
+    which re-copied the whole capacity row per admission.
+    """
+    new = dict(cache)
+    for key in ("k", "v", "k_scale", "v_scale"):
+        if key in cache:
+            src = mini[key][:, rows, toks]            # (L, N, H, ...)
+            new[key] = cache[key].at[:, pages, offs].set(
+                src.astype(cache[key].dtype))
+    return new
+
+
+def copy_pages(cache: dict, src: jnp.ndarray, dst: jnp.ndarray) -> dict:
+    """Copy-on-write device op: duplicate pool pages `src` into `dst` across
+    every layer (values + scales in lockstep).  The host allocator decides
+    WHEN (a write is about to land in a page with refcount > 1); this is the
+    whole device-side cost of divergence — one page, not a capacity row."""
+    new = dict(cache)
+    for key in ("k", "v", "k_scale", "v_scale"):
+        if key in cache:
+            new[key] = cache[key].at[:, dst].set(cache[key][:, src])
     return new
 
 
