@@ -50,6 +50,43 @@ for sched in continuous batch; do
     --scheduler "$sched" --kv-cache int8 --kv-page-size 4
 done
 
+# Fault smoke (ISSUE 8): forced pool exhaustion on both schedulers with the
+# per-round invariant sweep on — the preempt -> requeue -> recompute path
+# must reproduce the unfaulted run's greedy tokens BIT-identically, finish
+# every preempted request as "preempted_resumed", and conserve every pool
+# page (end-of-serve leak_check).  A tiny pool (--pool-pages) additionally
+# exercises REAL exhaustion + watermark backpressure, no injection needed.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'PY'
+import numpy as np
+from repro.launch.serve import serve
+
+rng = np.random.default_rng(0)
+prompts = [rng.integers(3, 256, size=(10,), dtype=np.int32) for _ in range(6)]
+gen_lens = rng.integers(4, 9, size=6).tolist()
+bases = {}
+for sched in ("continuous", "batch"):
+    kw = dict(batch=2, prompts=prompts, gen_lens=gen_lens, eos=-1,
+              verbose=False, scheduler=sched, kv_page_size=4)
+    bases[sched] = serve("stablelm-1.6b", "smoke", **kw)
+    fx = serve("stablelm-1.6b", "smoke", faults="exhaust@0",
+               check_invariants=True, **kw)
+    assert fx["outputs"] == bases[sched]["outputs"], \
+        f"{sched}: preempted recompute diverged from the unfaulted run"
+    assert fx["preemptions"] >= 1 and "preempted_resumed" in fx["status"]
+    assert ("exhaust", 0) in fx["faults_fired"] and not fx["faults_unfired"]
+    print(f"[fault-smoke] {sched}: parity OK, "
+          f"{fx['preemptions']} preemptions, statuses {fx['status']}")
+real = serve("stablelm-1.6b", "smoke", batch=2, prompts=prompts,
+             gen_lens=gen_lens, eos=-1, verbose=False,
+             scheduler="continuous", kv_page_size=4, pool_pages=7,
+             check_invariants=True)
+assert real["outputs"] == bases["continuous"]["outputs"], \
+    "small pool: real exhaustion diverged from the default-pool run"
+assert real["completed"] == 6
+print(f"[fault-smoke] small pool: {real['preemptions']} preemptions, "
+      f"{real['completed']} completed, statuses {real['status']}")
+PY
+
 # Fused-MLP + quantized-streaming smoke + perf-trajectory JSON: the
 # kernel/fused-epilogue/quantized benches run end-to-end and emit
 # BENCH_kernels.json (GFLOP/s, GB/s + %-of-measured-bandwidth for the
@@ -76,7 +113,8 @@ assert {"max_gflops", "pct_roofline", "fused_speedup", "min_fused_speedup",
         "combined_byte_ratio", "stall_tokens_chunked",
         "stall_tokens_unchunked", "max_stall_ms", "max_stall_ms_unchunked",
         "ttft_p95", "paged_capacity_multiplier", "paged_token_parity",
-        "paged_pages_live", "paged_pages_shared"} <= set(s), s
+        "paged_pages_live", "paged_pages_shared",
+        "preempt_recompute_parity", "fault_smoke_pass"} <= set(s), s
 assert s["max_gflops"] > 0 and 0 < s["pct_roofline"] <= 1, s
 # the fused epilogue must win structurally (fewer launches + HBM round
 # trips on every fused row) AND show no real wall-clock regression: the
@@ -114,6 +152,11 @@ assert s["ttft_p95"] > 0, s
 assert s["paged_capacity_multiplier"] > 1.5, s
 assert s["paged_token_parity"] == 1.0, s
 assert s["paged_pages_live"] > 0 and s["paged_pages_shared"] > 0, s
+# preemptible serving (ISSUE 8): the bench injects pool exhaustion on both
+# schedulers and asserts preempted requests recompute to the unfaulted
+# run's exact tokens; these flags are 1.0 only when that whole gate held
+assert s["preempt_recompute_parity"] == 1.0, s
+assert s["fault_smoke_pass"] == 1.0, s
 # bandwidth-bound rows must carry the GB/s roofline column
 names = {r["name"] for r in d["rows"]}
 for prefix in ("blas_gemv_", "blas_bgemv_", "blas_ddot_"):

@@ -159,14 +159,38 @@ def _expand_scales(scales: jnp.ndarray, block: Tuple[int, int], shape: tuple) ->
     return s.reshape(shape)
 
 
-def quantize(x: jnp.ndarray, spec: QuantSpec = QuantSpec()) -> QuantizedTensor:
+def quantize(x: jnp.ndarray, spec: QuantSpec = QuantSpec(),
+             validate: bool = False) -> QuantizedTensor:
     """Symmetric per-block int8 quantization over the last two dims.
 
     Leading dims are treated as independent matrices (layer/expert stacks).
-    Zero blocks get scale 0 and quantize to exact zeros.
+
+    Degenerate-input contract (the robustness guarantees tests pin):
+
+    - **All-zero blocks** get scale 0 and quantize to exact zeros; dequant
+      reproduces exact zeros.  No division by zero anywhere: the inverse
+      scale is computed through ``1 / max(scale, 1e-30)`` and masked to 0
+      for zero scales.
+    - **Subnormal-max blocks** (``0 < max|block| < ~1e-38``) produce a
+      finite (possibly zero, if ``amax / 127`` underflows) scale and finite
+      values — the round/clip pipeline bounds every value in [-127, 127]
+      even when the intermediate product overflows.
+    - **NaN/Inf inputs** PROPAGATE to the block's scale (NaN in -> NaN
+      scale, Inf in -> Inf scale; the packed values of such a block are
+      unspecified), so a downstream scale-finiteness check — the serving
+      invariant in `launch.faults` — always detects the corruption; nothing
+      silently launders a non-finite weight into a plausible scale.  With
+      ``validate=True`` (concrete inputs only, e.g. weight packing at serve
+      startup) non-finite inputs raise ``ValueError`` up front instead;
+      traced inputs cannot be validated and always use the propagate path.
     """
     if x.ndim < 2:
         raise ValueError(f"quantize needs a matrix, got shape {x.shape}")
+    if validate and not isinstance(x, jax.core.Tracer):
+        if not bool(jnp.isfinite(x).all()):
+            raise ValueError(
+                "quantize(validate=True): input contains NaN/Inf — refusing "
+                "to pack a corrupt tensor (the scale would be non-finite)")
     if spec.transpose:
         x = jnp.swapaxes(x, -2, -1)
     m, n = x.shape[-2:]
@@ -180,6 +204,13 @@ def quantize(x: jnp.ndarray, spec: QuantSpec = QuantSpec()) -> QuantizedTensor:
     values = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8).reshape(x.shape)
     return QuantizedTensor(values=values, scales=scales, block=(qm, qn),
                            transposed=spec.transpose)
+
+
+def scales_finite(qt: QuantizedTensor) -> bool:
+    """The quant-scale finiteness invariant: True iff every block scale is
+    finite.  A False here means a NaN/Inf input was quantized somewhere
+    upstream (see the `quantize` degenerate-input contract)."""
+    return bool(jnp.isfinite(qt.scales).all())
 
 
 def is_quantized(x) -> bool:
@@ -403,7 +434,12 @@ def host_fast_path_eligible(qt: QuantizedTensor) -> bool:
 
 @jax.jit
 def quantize_activation(x: jnp.ndarray):
-    """Dynamic symmetric per-call activation quantization: (x8, sx)."""
+    """Dynamic symmetric per-call activation quantization: (x8, sx).
+
+    Runs under jit, so the NaN/Inf contract is the propagate half of
+    `quantize`'s: a non-finite activation yields a non-finite `sx` (never a
+    silently plausible scale), which the serve-time finiteness invariant
+    (`launch.faults.check_cache_finite` / --check-invariants) detects."""
     xf = x.astype(jnp.float32)
     sx = jnp.max(jnp.abs(xf)) / INT8_MAX
     inv = jnp.where(sx > 0, 1.0 / jnp.maximum(sx, 1e-30), 0.0)

@@ -1,0 +1,231 @@
+"""Deterministic fault injection + serving invariants (ISSUE 8).
+
+Production paged-KV serving treats exhaustion, preemption, and corrupt
+numerics as first-class states, not crashes.  This module is the harness
+that makes those states REACHABLE on demand and PROVABLY handled:
+
+Fault plans
+-----------
+A :class:`FaultPlan` names, ahead of time, exactly which occurrences of
+which operations fail — so every failure is reproducible bit-for-bit and
+the recovery path (preempt → re-queue → recompute) can be asserted against
+an unfaulted run.  The spec is a comma-separated list of ``kind@index``:
+
+- ``exhaust@K`` — the K-th on-demand page-growth allocation (0-indexed,
+  counted across the run) raises :class:`~repro.launch.paging.PoolExhausted`
+  as if the pool were empty.  The scheduler's victim-selection/preemption
+  path runs exactly as it would under real memory pressure.
+- ``preempt@K`` — decode round K force-preempts the newest active slot
+  regardless of pool state (the batch-at-a-time scheduler reserves its
+  pages statically, so injected exhaustion manifests there directly as the
+  preemption it would cause).
+- ``graft@K`` — the K-th admission graft fails (a simulated device
+  failure, injected BEFORE the cache-donating graft call so the device
+  cache is untouched); the scheduler must roll the admission back
+  page-exactly and retry it at a later round.
+- ``nan@K`` / ``inf@K`` — decode round K runs a poisoned step function that
+  adds NaN/Inf into the post-embedding activations, so the corruption flows
+  through every layer, the KV write, and the logits — what a real numeric
+  fault does.
+- ``qscale@K`` — decode round K writes a non-finite value into a live KV
+  quantization scale (requires ``--kv-cache int8``): the degenerate-scale
+  corruption the quant-scale finiteness invariant exists to catch.
+
+Serve threads the plan through ``serve(..., faults="exhaust@2")`` or the
+``REPRO_FAULTS`` env var (flag wins).  ``plan.fired`` records what actually
+triggered, so tests can assert a fault both fired and was survived.
+
+Invariant checkers
+------------------
+Pure functions over the scheduler's host state + the device cache, run
+every round under ``--check-invariants`` (and directly by tests):
+
+- page refcount conservation (free + live + trash == pool; no page both
+  free and live) — :func:`check_allocator`;
+- no page-table entry pointing at a freed page, active rows exactly
+  mirroring the host's page lists, trash page 0 never referenced as a live
+  page — :func:`check_page_table`;
+- every float array in the KV cache finite — quant scale finiteness plus
+  activation/KV finiteness in one sweep — :func:`check_cache_finite`.
+
+Violations raise :class:`InvariantViolation` naming the broken invariant.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.launch import paging
+
+#: fault kinds indexed by an OPERATION counter (n-th occurrence fails)
+_OP_KINDS = ("exhaust", "graft")
+#: fault kinds indexed by the DECODE ROUND they fire at
+_STEP_KINDS = ("preempt", "nan", "inf", "qscale")
+KINDS = _OP_KINDS + _STEP_KINDS
+
+#: env var the serve CLI reads when --faults is not given
+FAULTS_ENV = "REPRO_FAULTS"
+
+
+class FaultInjected(RuntimeError):
+    """A simulated failure raised by an injected fault (e.g. graft@K)."""
+
+
+class InvariantViolation(AssertionError):
+    """A serving invariant does not hold; the message names which one."""
+
+
+class FaultPlan:
+    """Parsed fault schedule + occurrence counters + a fired log."""
+
+    def __init__(self, events: Dict[str, List[int]]):
+        for kind in events:
+            if kind not in KINDS:
+                raise ValueError(f"unknown fault kind {kind!r} (know {KINDS})")
+        # kind -> sorted pending indices (multiset, consumed as they fire)
+        self.events = {k: sorted(v) for k, v in events.items() if v}
+        self._op_count = {k: 0 for k in _OP_KINDS}
+        self.fired: List[Tuple[str, int]] = []
+
+    @classmethod
+    def parse(cls, spec: Optional[str]) -> "FaultPlan":
+        """``"exhaust@2,nan@5"`` -> plan.  Empty/None -> no faults."""
+        events: Dict[str, List[int]] = {}
+        for part in (spec or "").split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "@" not in part:
+                raise ValueError(
+                    f"fault {part!r} must be kind@index (e.g. exhaust@2)")
+            kind, idx = part.split("@", 1)
+            events.setdefault(kind.strip(), []).append(int(idx))
+        return cls(events)
+
+    @classmethod
+    def from_env(cls) -> "FaultPlan":
+        return cls.parse(os.environ.get(FAULTS_ENV))
+
+    def __bool__(self) -> bool:
+        return any(self.events.values())
+
+    def take(self, kind: str) -> bool:
+        """Count one occurrence of an op-indexed fault point (``exhaust``,
+        ``graft``); True iff THIS occurrence is scheduled to fail."""
+        assert kind in _OP_KINDS, kind
+        idx = self._op_count[kind]
+        self._op_count[kind] += 1
+        pend = self.events.get(kind, [])
+        if idx in pend:
+            pend.remove(idx)
+            self.fired.append((kind, idx))
+            return True
+        return False
+
+    def at_step(self, kind: str, step: int) -> bool:
+        """True iff a step-indexed fault (``preempt``/``nan``/``inf``/
+        ``qscale``) is scheduled for decode round `step` (consumed)."""
+        assert kind in _STEP_KINDS, kind
+        pend = self.events.get(kind, [])
+        if step in pend:
+            pend.remove(step)
+            self.fired.append((kind, step))
+            return True
+        return False
+
+    def pending(self) -> Dict[str, List[int]]:
+        """Faults that have not fired yet (tests assert this drains)."""
+        return {k: list(v) for k, v in self.events.items() if v}
+
+
+def as_plan(faults) -> FaultPlan:
+    """serve()'s faults kwarg: None/str/FaultPlan -> FaultPlan."""
+    if faults is None:
+        return FaultPlan({})
+    if isinstance(faults, FaultPlan):
+        return faults
+    return FaultPlan.parse(faults)
+
+
+# ---------------------------------------------------------------------------
+# Invariant checkers
+# ---------------------------------------------------------------------------
+
+def check_allocator(alloc: paging.PageAllocator) -> None:
+    """Page refcount conservation, re-raised as an InvariantViolation."""
+    try:
+        alloc.leak_check()
+    except paging.PageError as e:
+        raise InvariantViolation(f"allocator conservation: {e}") from e
+
+
+def check_page_table(table: np.ndarray, alloc: paging.PageAllocator,
+                     active: Sequence[bool],
+                     slot_pages: Sequence[Sequence[int]]) -> None:
+    """The device-side page table must mirror the host allocator exactly.
+
+    For every ACTIVE slot s: row s's leading entries are exactly the host's
+    ``slot_pages[s]`` (every one backed by a live page, never the trash
+    page), and the remainder of the row is trash.  For every inactive slot:
+    the whole row points at trash — a freed slot that still routes into a
+    (recyclable) page is a use-after-free waiting for the next admission.
+    """
+    table = np.asarray(table)
+    for s in range(table.shape[0]):
+        row = table[s]
+        pages = list(slot_pages[s])
+        if paging.TRASH_PAGE in pages:
+            raise InvariantViolation(
+                f"slot {s} holds trash page {paging.TRASH_PAGE} as a live page")
+        if not active[s]:
+            if pages:
+                raise InvariantViolation(
+                    f"inactive slot {s} still owns pages {pages}")
+            if (row != paging.TRASH_PAGE).any():
+                raise InvariantViolation(
+                    f"inactive slot {s}'s table row routes into the pool: "
+                    f"{row.tolist()}")
+            continue
+        if list(row[:len(pages)]) != pages:
+            raise InvariantViolation(
+                f"slot {s} table row {row[:len(pages)].tolist()} != host "
+                f"page list {pages}")
+        if (row[len(pages):] != paging.TRASH_PAGE).any():
+            raise InvariantViolation(
+                f"slot {s} table tail routes past its {len(pages)} pages: "
+                f"{row.tolist()}")
+        for p in pages:
+            if alloc.refcount(p) < 1:
+                raise InvariantViolation(
+                    f"slot {s} table entry points at freed page {p}")
+
+
+def check_cache_finite(cache: dict) -> None:
+    """Every float array in the KV cache — values AND quantization scales —
+    must be finite.  Int8 value pools are skipped (always finite); their
+    scale pools are exactly the quant-scale finiteness invariant."""
+    import jax.numpy as jnp
+    for key in ("k", "v", "k_scale", "v_scale"):
+        arr = cache.get(key)
+        if arr is None or not jnp.issubdtype(arr.dtype, jnp.floating):
+            continue
+        if not bool(jnp.isfinite(arr).all()):
+            what = "quant scale" if key.endswith("_scale") else "KV value"
+            raise InvariantViolation(
+                f"non-finite {what} in cache[{key!r}]")
+
+
+def check_serve_invariants(*, alloc: Optional[paging.PageAllocator] = None,
+                           table=None, active=None, slot_pages=None,
+                           cache: Optional[dict] = None) -> None:
+    """One round's full invariant sweep; pass whatever state the scheduler
+    variant actually has (dense runs have no allocator/table)."""
+    if alloc is not None:
+        check_allocator(alloc)
+        if table is not None:
+            check_page_table(table, alloc, active, slot_pages)
+    if cache is not None:
+        check_cache_finite(cache)

@@ -47,6 +47,13 @@ class PoolExhausted(RuntimeError):
     """The page pool has no free pages left for an allocation."""
 
 
+class PageError(RuntimeError):
+    """A page lifecycle violation: double free, freeing a shared page,
+    retaining a dead page, or a conservation (leak) failure.  These are
+    always caller bugs — the allocator refuses to limp along with corrupt
+    refcounts, because a wrong refcount silently aliases two slots' KV."""
+
+
 class PageAllocator:
     """Free list + refcounts + prefix registry over `num_pages` pages of
     `page_size` tokens (page 0 reserved as trash)."""
@@ -76,16 +83,37 @@ class PageAllocator:
             self._ref[p] = 1
         return pages
 
+    def can_admit(self, tokens: int, reclaimable: int = 0) -> bool:
+        """Watermark admission control: would a request writing `tokens`
+        cache entries fit in the free pages plus `reclaimable` pages the
+        scheduler could preempt back (non-shared pages of victim slots — the
+        caller computes that sum, because only it knows which slots are
+        preemptible)?  `tokens` counts every cache index the request will
+        touch through its first decode write (prompt + 1).  The credit is
+        capped at the pool's allocatable size: no amount of reclaim makes a
+        request fit that a fully-free pool cannot hold."""
+        need = -(-max(0, int(tokens)) // self.page_size)
+        avail = len(self._free) + max(0, int(reclaimable))
+        return need <= min(avail, self.num_pages - 1)
+
     def retain(self, pages: Iterable[int]) -> None:
-        """Add one reference to each (already-live) page."""
+        """Add one reference to each (already-live) page.  Retaining a freed
+        page (or trash) is a hard error: it would resurrect recycled KV."""
+        pages = list(pages)
+        for p in pages:
+            if p not in self._ref:
+                raise PageError(f"retain of dead page {p} (refcount 0)")
         for p in pages:
             self._ref[p] += 1
 
     def release(self, pages: Iterable[int]) -> List[int]:
         """Drop one reference per page; pages reaching zero return to the
-        free list (and leave the prefix registry).  Returns the freed ones."""
+        free list (and leave the prefix registry).  Returns the freed ones.
+        Releasing an already-free page is a hard error (double free)."""
         freed = []
         for p in pages:
+            if p not in self._ref:
+                raise PageError(f"double free of page {p} (refcount already 0)")
             self._ref[p] -= 1
             if self._ref[p] == 0:
                 del self._ref[p]
@@ -93,6 +121,51 @@ class PageAllocator:
                 self._free.append(p)
                 freed.append(p)
         return freed
+
+    def free(self, pages: Iterable[int]) -> None:
+        """Hard-deallocate exclusively-owned pages.  Unlike `release` (a
+        refcount decrement that tolerates sharing), `free` demands refcount
+        exactly 1: freeing a shared page out from under its other referents,
+        or a page that is already free, is a hard error."""
+        pages = list(pages)
+        for p in pages:
+            r = self._ref.get(p, 0)
+            if r == 0:
+                raise PageError(f"double free of page {p} (refcount already 0)")
+            if r > 1:
+                raise PageError(
+                    f"free of shared page {p} (refcount {r}); release() drops "
+                    "one reference, free() requires exclusive ownership")
+        for p in pages:
+            del self._ref[p]
+            self.invalidate(p)
+            self._free.append(p)
+
+    def leak_check(self) -> None:
+        """Conservation invariant: every page is exactly one of free, live
+        (refcount >= 1), or the reserved trash page.  Raises PageError on any
+        leak, double-accounting, or trash-page corruption.  Called at
+        end-of-serve in tests and every round under --check-invariants."""
+        free = list(self._free)
+        free_set = set(free)
+        if len(free_set) != len(free):
+            raise PageError("free list contains duplicates")
+        if TRASH_PAGE in free_set or TRASH_PAGE in self._ref:
+            raise PageError("trash page 0 entered the free list or went live")
+        overlap = free_set & set(self._ref)
+        if overlap:
+            raise PageError(f"pages both free and live: {sorted(overlap)}")
+        bad_ref = [p for p, r in self._ref.items() if r < 1]
+        if bad_ref:
+            raise PageError(f"live pages with refcount < 1: {sorted(bad_ref)}")
+        total = len(free_set) + len(self._ref) + 1  # +1: trash
+        if total != self.num_pages:
+            raise PageError(
+                f"page leak: {len(free_set)} free + {len(self._ref)} live "
+                f"+ 1 trash = {total}, pool has {self.num_pages}")
+        dangling = [p for p in self._page_key if p not in self._ref]
+        if dangling:
+            raise PageError(f"freed pages still registered: {sorted(dangling)}")
 
     def refcount(self, page: int) -> int:
         return self._ref.get(page, 0)

@@ -33,6 +33,7 @@ from __future__ import annotations
 import argparse
 import collections
 import dataclasses
+import os
 import time
 from typing import Optional, Sequence
 
@@ -41,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blas
+from repro.launch import faults as faults_lib
 from repro.launch import paging
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tf
@@ -55,7 +57,9 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
           prompts: Optional[Sequence[np.ndarray]] = None,
           quantize: str = "none", kv_cache: str = "model",
           prefill_chunk: Optional[int] = None,
-          kv_page_size: Optional[int] = None, prefix_reuse: bool = True):
+          kv_page_size: Optional[int] = None, prefix_reuse: bool = True,
+          deadline_ms=None, pool_pages: Optional[int] = None,
+          check_invariants: bool = False, faults=None):
     """Serve `requests` synthetic prompts through greedy decode.
 
     quantize="int8" packs every projection weight with block-scaled int8
@@ -102,6 +106,39 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
     dense cache under both schedulers; stats gain `pages_live`,
     `pages_shared`, `cow_copies` and `paged_capacity_multiplier` (logical /
     physical pages — >1 exactly when prefixes are shared).
+
+    Operational robustness (ISSUE 8):
+
+    pool_pages: override the paged pool size (default: sized so exhaustion
+    cannot happen).  A small pool turns page pressure into real scheduling:
+    admission BLOCKS at the allocator watermark (free + reclaimable pages,
+    FIFO head first — backpressure, not a crash), and an allocation failure
+    during decode-time page growth PREEMPTS a victim slot (newest admission
+    first) whose request is re-queued at the head and later recomputed —
+    continuous scheduler: re-prefill of prompt + already-emitted tokens,
+    continuing the greedy stream bit-identically; batch scheduler: full
+    recompute from the original prompt, same final tokens under greedy
+    decoding.  (Caveat: the vlm family redraws its random patch embeds per
+    admission, so a preempted vlm request's recompute is NOT bit-exact.)
+    A request that cannot fit even a fully-free pool is terminally
+    "rejected".
+
+    deadline_ms: per-request wall-clock budget (scalar or one per request),
+    measured from serve start and enforced at decode-round boundaries — an
+    expired request keeps its emitted tokens and finishes with status
+    "timeout".  deadline_ms=0 deterministically yields exactly the prefill
+    token.
+
+    faults: a fault spec string ("exhaust@2,nan@5"), a
+    launch.faults.FaultPlan, or None — deterministic injection of allocator
+    exhaustion, graft failure, NaN/Inf activations and corrupt quant scales
+    (see launch/faults.py).  check_invariants=True runs the page/refcount/
+    finiteness invariant sweep every decode round (tests and CI smokes).
+
+    Every request ends in exactly one terminal `status`: "ok",
+    "preempted_resumed", "timeout" or "rejected"; stats count
+    `preemptions`, `rejections` and `timeouts`, and `faults_fired` /
+    `faults_unfired` record the injection log.
 
     Returns a stats dict: completed/tokens/prefills/decode_steps counters,
     tok_s, mean live-slot `occupancy`, per-request `ttft` (seconds to first
@@ -150,6 +187,22 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
                 f"paged KV cache supports {tf.SLOT_CACHE_FAMILIES} families "
                 f"(per-slot KV caches); {cfg.family!r} keeps the dense cache"
             )
+    plan = faults_lib.as_plan(faults)
+    if "qscale" in plan.events and kv_cache != "int8":
+        raise ValueError("qscale faults corrupt KV quantization scales and "
+                         "need kv_cache='int8'")
+    if pool_pages is not None:
+        if kv_page_size is None:
+            raise ValueError("pool_pages sizes the paged pool and needs "
+                             "kv_page_size")
+        if pool_pages < 2:
+            raise ValueError(f"pool_pages needs >= 2 (trash + 1 allocatable), "
+                             f"got {pool_pages}")
+    if deadline_ms is not None:
+        deadline_ms = ([float(deadline_ms)] * n if np.isscalar(deadline_ms)
+                       else [None if d is None else float(d) for d in deadline_ms])
+        if len(deadline_ms) != n:
+            raise ValueError(f"{len(deadline_ms)} deadline_ms for {n} requests")
     with blas.use_backend(backend):
         if scheduler == "continuous":
             if cfg.family not in tf.SLOT_CACHE_FAMILIES:
@@ -161,10 +214,18 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
             stats = _serve_continuous(cfg, prompts, list(gen_lens), batch, seed,
                                       eos, quantize, prefill_chunk,
                                       page_size=kv_page_size,
-                                      prefix_reuse=prefix_reuse)
+                                      prefix_reuse=prefix_reuse,
+                                      deadline_ms=deadline_ms,
+                                      pool_pages=pool_pages,
+                                      check_invariants=check_invariants,
+                                      plan=plan)
         elif scheduler == "batch":
             stats = _serve_batch(cfg, prompts, list(gen_lens), batch, seed, eos,
-                                 quantize, page_size=kv_page_size)
+                                 quantize, page_size=kv_page_size,
+                                 deadline_ms=deadline_ms,
+                                 pool_pages=pool_pages,
+                                 check_invariants=check_invariants,
+                                 plan=plan)
         else:
             raise ValueError(f"scheduler must be 'continuous' or 'batch', got {scheduler!r}")
     if verbose:
@@ -174,11 +235,19 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
                           f"{stats['pages_shared']} shared, "
                           f"{stats['cow_copies']} CoW, capacity "
                           f"x{stats['paged_capacity_multiplier']:.2f}")
+        robust_info = ""
+        if stats["preemptions"] or stats["rejections"] or stats["timeouts"]:
+            robust_info = (f", {stats['preemptions']} preemptions / "
+                           f"{stats['rejections']} rejections / "
+                           f"{stats['timeouts']} timeouts")
+        if stats.get("faults_fired"):
+            robust_info += f", faults fired {stats['faults_fired']}"
         print(f"[serve] {arch} ({scheduler}): {stats['completed']} requests, "
               f"{stats['tokens']} tokens in {stats['elapsed_s']:.2f}s -> "
               f"{stats['tok_s']:.1f} tok/s ({stats['prefills']} prefills, "
               f"{stats['decode_steps']} decode steps, "
-              f"occupancy {stats['occupancy']:.2f}{paged_info})", flush=True)
+              f"occupancy {stats['occupancy']:.2f}{paged_info}{robust_info})",
+              flush=True)
     return stats
 
 
@@ -189,6 +258,15 @@ def _new_stats(nreq: int) -> dict:
         "ttft": [None] * nreq,
         "admit_step": [None] * nreq,
         "finish_step": [None] * nreq,
+        # terminal status per request: "ok" (completed untouched),
+        # "preempted_resumed" (completed, but was preempted and recomputed
+        # at least once), "timeout" (deadline_ms expired at a decode-round
+        # boundary), "rejected" (can never fit the page pool) — None while
+        # in flight
+        "status": [None] * nreq,
+        "preemptions": 0,     # slots preempted (victims of pool pressure)
+        "rejections": 0,      # requests that can never fit the pool
+        "timeouts": 0,        # requests cut by their deadline
         # worst case over the run, measured between consecutive decode steps
         # while live slots exist: wall clock, and — deterministically — how
         # many admission-prefill tokens were processed in the gap (the
@@ -198,18 +276,36 @@ def _new_stats(nreq: int) -> dict:
     }
 
 
-def _record_token(stats: dict, rid: int, tok_val: int, eos: int, remaining: int) -> bool:
+def _record_token(stats: dict, rid: int, tok_val: int, eos: int,
+                  remaining: int, preempted: bool = False) -> bool:
     """Append one generated token for request `rid`; returns True if the
     request just finished (EOS, or its budget has `remaining` <= 0 tokens
     left AFTER this one).  The single budget/EOS rule both schedulers use —
-    keep it in one place so they cannot drift."""
+    keep it in one place so they cannot drift.  `preempted` marks whether
+    the request was ever preempted, for the terminal status."""
     stats["outputs"][rid].append(tok_val)
     stats["tokens"] += 1
     if tok_val == eos or remaining <= 0:
         stats["finish_step"][rid] = stats["decode_steps"]
         stats["completed"] += 1
+        stats["status"][rid] = "preempted_resumed" if preempted else "ok"
         return True
     return False
+
+
+def _timeout(stats: dict, rid: int) -> None:
+    """Terminal bookkeeping for a deadline expiry at a decode-round
+    boundary: emitted tokens are kept, the request counts as completed with
+    status "timeout"."""
+    stats["status"][rid] = "timeout"
+    stats["timeouts"] += 1
+    stats["finish_step"][rid] = stats["decode_steps"]
+    stats["completed"] += 1
+
+
+def _deadline_expired(deadline_ms, rid: int, t0: float) -> bool:
+    dl = deadline_ms[rid] if deadline_ms else None
+    return dl is not None and (time.time() - t0) * 1e3 >= dl
 
 
 def _finalize(stats: dict, occ: list, t0: float) -> dict:
@@ -259,7 +355,9 @@ def _quantize_params(params, quantize: str):
 
 
 def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
-                      prefill_chunk=None, page_size=None, prefix_reuse=True):
+                      prefill_chunk=None, page_size=None, prefix_reuse=True,
+                      deadline_ms=None, pool_pages=None,
+                      check_invariants=False, plan=None):
     """Slot-level admission: finished sequences free their slot immediately;
     each free slot prefills the next FIFO request into the shared cache.
 
@@ -275,7 +373,27 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     grafts only the unshared suffix tokens; a finished slot's row is
     repointed at the trash page and its pages go back to the free list.  The
     decode step itself is unchanged — still one masked launch over the slot
-    grid, reading and writing straight through the page table."""
+    grid, reading and writing straight through the page table.
+
+    Robustness layer (ISSUE 8).  Admission reserves only the pages the
+    prompt plus the first decode write need; decode GROWS the slot's page
+    run on demand at page boundaries.  Admission is gated by the
+    allocator's watermark (`can_admit` against free + reclaimable pages):
+    the FIFO head blocks — backpressure — instead of crashing the pool.  A
+    growth (or injected) allocation failure preempts a victim slot —
+    newest admission first, slots whose pages are all prefix-shared are
+    skipped because releasing them reclaims nothing — frees its non-shared
+    pages, and re-queues its request at the queue head; the re-admission
+    prefills the ORIGINAL PROMPT + ALREADY-EMITTED TOKENS, which by the
+    chunked-prefill parity property continues the greedy stream
+    bit-identically (already-emitted tokens are never re-recorded).
+    Per-request deadlines are enforced at decode-round boundaries
+    (terminal status "timeout"); a request whose prompt can never fit the
+    whole pool is terminally "rejected".  `plan` (a faults.FaultPlan)
+    injects deterministic exhaustion/graft/NaN/Inf/scale faults, and
+    `check_invariants` sweeps the allocator/page-table/finiteness
+    invariants every round."""
+    plan = plan if plan is not None else faults_lib.FaultPlan({})
     nreq = len(prompts)
     cache_len = _cache_len(cfg, prompts, gen_lens)
     rng = np.random.default_rng(seed + 1)
@@ -284,16 +402,23 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     # the admission prefill's zero template is reused every round: no donation
     prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg))
     decode_fn = jax.jit(steps_lib.make_decode_step_slots(cfg), donate_argnums=(2,))
+    # poisoned step variants, traced only when a NaN/Inf fault is scheduled
+    decode_faulted = {
+        kind: jax.jit(steps_lib.make_decode_step_slots(cfg, act_fault=val),
+                      donate_argnums=(2,))
+        for kind, val in (("nan", float("nan")), ("inf", float("inf")))
+        if kind in plan.events
+    }
     mini_zero = tf.init_cache(cfg, batch, cache_len)
 
     paged = page_size is not None
     if paged:
         max_pages = -(-cache_len // page_size)
-        # worst case (no sharing) needs batch * max_pages live pages and
-        # sharing only ever lowers that — each CoW allocation is paid for by
-        # the >= 1 page its share saved — so one slack page per slot is
-        # strictly conservative; +1 for the reserved trash page.
-        num_pages = 1 + batch * (max_pages + 1)
+        # the pool still defaults to the no-exhaustion worst case (each
+        # slot's full capacity + slack); on-demand growth means live pages
+        # track ACTUAL tokens, and pool_pages can shrink the pool to create
+        # real backpressure/preemption traffic
+        num_pages = pool_pages if pool_pages is not None else 1 + batch * (max_pages + 1)
         alloc = paging.PageAllocator(num_pages, page_size)
         slot_pages = [[] for _ in range(batch)]
         graft_fn = jax.jit(tf.graft_pages, donate_argnums=(0,))
@@ -331,6 +456,7 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     if paged:
         cache = tf.init_cache(cfg, batch, cache_len, per_slot=True,
                               page_size=page_size, num_pages=num_pages)
+        max_pages_row = cache["page_table"].shape[1]
     else:
         cache = tf.init_cache(cfg, batch, cache_len, per_slot=True)
     # the token block and active mask live on device; the host only touches
@@ -340,7 +466,14 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     active_dev = jnp.zeros(batch, bool)
     slot_req = np.full(batch, -1)
     slot_left = np.zeros(batch, np.int64)
+    slot_pos = np.zeros(batch, np.int64)        # next decode write position
+    slot_admit_seq = np.zeros(batch, np.int64)  # admission order (victim pick)
+    admit_seq = [0]
+    preempted_ever = [False] * nreq
     active = np.zeros(batch, bool)
+    # the device mask went stale via a free/preempt outside admission; the
+    # next decode round refreshes it once instead of per event
+    dirty = [False]
     stats = _new_stats(nreq)
     if paged:
         stats.update({"kv_page_size": page_size, "pages_live": 0,
@@ -362,12 +495,146 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     last_decode = [None]
     prefill_gap = [0]
 
+    def free_slot(s):
+        """Release slot s's pages and repoint its table row at trash so the
+        frozen slot's masked decode writes can never land in a recycled
+        page.  Shared by finish, timeout and preemption."""
+        nonlocal cache
+        active[s] = False
+        slot_req[s] = -1
+        dirty[0] = True
+        if paged:
+            alloc.release(slot_pages[s])
+            slot_pages[s] = []
+            cache["page_table"] = cache["page_table"].at[s].set(
+                paging.TRASH_PAGE)
+
+    def pick_victim():
+        """Preemption victim: the NEWEST admission (least sunk prefill work
+        lost, and strict FIFO keeps older requests making progress).  Paged
+        slots whose pages are ALL prefix-shared are skipped — releasing them
+        reclaims nothing."""
+        best, best_seq = None, -1
+        for s in range(batch):
+            if not active[s]:
+                continue
+            if paged and not any(not alloc.shared(p) for p in slot_pages[s]):
+                continue
+            if slot_admit_seq[s] > best_seq:
+                best, best_seq = s, slot_admit_seq[s]
+        return best
+
+    def preempt(s):
+        """Evict slot s: free its (non-shared) pages and put its request
+        back at the HEAD of the queue.  The re-admission prefills the
+        original prompt + every token already emitted, so the greedy stream
+        continues bit-identically; emitted tokens are never re-recorded."""
+        vid = slot_req[s]
+        stats["preemptions"] += 1
+        preempted_ever[vid] = True
+        free_slot(s)
+        pending.appendleft((vid, prompts[vid]))
+
+    def free_up(n_pages):
+        """Preempt victims until `n_pages` pages are free; False if no
+        preemptible victim remains (every live page is shared)."""
+        while alloc.free_pages() < n_pages:
+            v = pick_victim()
+            if v is None:
+                return False
+            preempt(v)
+        return True
+
+    def ensure_page(s):
+        """Grow slot s's page run to cover its next decode write.  An
+        injected (`exhaust@K`) or real allocation failure preempts a victim;
+        returns False iff s itself was the victim (skip its step)."""
+        nonlocal cache
+        pidx = int(slot_pos[s]) // page_size
+        if pidx < len(slot_pages[s]):
+            return True
+        assert pidx < max_pages_row, (pidx, max_pages_row)
+        if plan.take("exhaust"):
+            v = pick_victim()
+            if v is not None:
+                preempt(v)
+                if v == s:
+                    return False
+        while not alloc.free_pages():
+            v = pick_victim()
+            if v is None:
+                # unreachable while s itself is active (an active decoding
+                # slot always owns its non-shared write page) — kept as the
+                # honest failure mode rather than a silent hang
+                raise paging.PoolExhausted(
+                    f"growth for slot {s}: no free page and no victim")
+            preempt(v)
+            if v == s:
+                return False
+        newp = alloc.alloc(1)[0]
+        slot_pages[s].append(newp)
+        cache["page_table"] = cache["page_table"].at[s, pidx].set(newp)
+        return True
+
+    def poison_scale():
+        """qscale fault: write Inf into a live KV quantization scale — the
+        corruption check_cache_finite exists to catch."""
+        nonlocal cache
+        if "k_scale" not in cache:
+            return
+        arr = cache["k_scale"]
+        if paged:
+            live = [s for s in range(batch) if active[s] and slot_pages[s]]
+            loc = slot_pages[live[0]][0] if live else paging.TRASH_PAGE
+        else:
+            live = [s for s in range(batch) if active[s]]
+            loc = live[0] if live else 0
+        idx = (0, loc) + (0,) * (arr.ndim - 2)
+        cache["k_scale"] = arr.at[idx].set(jnp.inf)
+
     def decode_round():
         """One masked decode step over the live slots + host bookkeeping —
-        called from the main loop AND between admission prefill chunks."""
+        called from the main loop AND between admission prefill chunks.
+        Round boundaries are where deadlines are enforced, injected faults
+        fire, page runs grow, and (under --check-invariants) the full
+        invariant sweep runs."""
         nonlocal tok_dev, cache, active_dev
-        occ.append(active.sum() / batch)
-        tok_dev, cache = decode_fn(params, tok_dev, cache, active_dev)
+        step_idx = stats["decode_steps"]
+        # deadline sweep FIRST: boundaries are the only cut points, so a
+        # deadline_ms=0 request deterministically keeps exactly its prefill
+        # token
+        for s in range(batch):
+            if active[s] and _deadline_expired(deadline_ms, slot_req[s], t0):
+                _timeout(stats, slot_req[s])
+                free_slot(s)
+        if not active.any():
+            active_dev = jnp.asarray(active)
+            dirty[0] = False
+            return
+        # injected faults for THIS round.  preempt@K is the only way a
+        # dense-cache slot is ever preempted (no pool to pressure).
+        if plan.at_step("preempt", step_idx):
+            v = pick_victim()
+            if v is not None:
+                preempt(v)
+        if paged:
+            for s in range(batch):
+                if active[s]:
+                    ensure_page(s)
+        if plan.at_step("qscale", step_idx):
+            poison_scale()
+        fn = decode_fn
+        for kind in ("nan", "inf"):
+            if plan.at_step(kind, step_idx):
+                fn = decode_faulted[kind]
+        if dirty[0]:
+            active_dev = jnp.asarray(active)
+            dirty[0] = False
+        stepped = active.copy()
+        if not stepped.any():
+            return
+        occ.append(stepped.sum() / batch)
+        tok_dev, cache = fn(params, tok_dev, cache, active_dev)
         stats["decode_steps"] += 1
         tok_np = np.asarray(tok_dev)[:, 0]
         now = time.time()
@@ -378,27 +645,34 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         stats["max_stall_prefill_tokens"] = max(
             stats["max_stall_prefill_tokens"], prefill_gap[0])
         prefill_gap[0] = 0
-        finished = False
-        freed_rows = []
         for s in range(batch):
-            if not active[s]:
+            if not stepped[s]:
                 continue
+            slot_pos[s] += 1
             slot_left[s] -= 1
-            if _record_token(stats, slot_req[s], int(tok_np[s]), eos, slot_left[s]):
-                active[s] = False
-                slot_req[s] = -1
-                finished = True
-                if paged:
-                    alloc.release(slot_pages[s])
-                    slot_pages[s] = []
-                    freed_rows.append(s)
-        if freed_rows:
-            # repoint dead rows at the trash page so the frozen slots' masked
-            # decode writes can never land in a recycled page
-            cache["page_table"] = cache["page_table"].at[
-                jnp.asarray(freed_rows)].set(paging.TRASH_PAGE)
-        if finished:
+            rid = slot_req[s]
+            if _record_token(stats, rid, int(tok_np[s]), eos, slot_left[s],
+                             preempted=preempted_ever[rid]):
+                free_slot(s)
+        if dirty[0]:
             active_dev = jnp.asarray(active)
+            dirty[0] = False
+        if paged:
+            sample_pages()
+        if check_invariants:
+            faults_lib.check_serve_invariants(
+                alloc=alloc if paged else None,
+                table=cache.get("page_table"), active=active,
+                slot_pages=slot_pages if paged else None, cache=cache)
+
+    def _reclaimable():
+        """Pages preemption could free RIGHT NOW: the non-shared pages of
+        active slots (the same slots pick_victim may evict)."""
+        n = 0
+        for s in range(batch):
+            if active[s]:
+                n += sum(1 for p in slot_pages[s] if not alloc.shared(p))
+        return n
 
     while pending or active.any():
         if not active.any():
@@ -410,20 +684,56 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         # the admission prefill runs on the fixed grid shape (one launch per
         # distinct prompt length this round; padding rows are dropped at the
         # graft), so a lone admission is not a degenerate batch-1 launch.
-        admits = []
+        # Under pool pressure the FIFO head BLOCKS at the allocator's
+        # watermark (free + reclaimable pages) — backpressure, never
+        # skip-ahead — and a request that could not fit even a fully-free
+        # pool is terminally "rejected".  A re-queued (preempted) request's
+        # admission prompt is its original prompt + every token it already
+        # emitted, so the greedy continuation is bit-identical.
+        admits = []       # (slot, rid, admission_prompt, n_already_emitted)
+        reserved = 0      # pages this round's earlier picks will allocate
+        blocked = False
         for s in range(batch):
-            if not active[s] and pending:
-                rid, prompt = pending.popleft()
-                admits.append((s, rid, prompt))
+            if active[s] or blocked:
+                continue
+            while pending:
+                rid, base = pending[0]
+                em = stats["outputs"][rid]
+                adm = (np.concatenate([base, np.asarray(em, np.int32)])
+                       if em else base)
+                if paged:
+                    total = len(adm) + n_prefix
+                    # pages through the FIRST decode write (pos == total);
+                    # later writes grow on demand at round boundaries
+                    need = total // page_size + 1
+                    if need > num_pages - 1:
+                        pending.popleft()
+                        stats["status"][rid] = "rejected"
+                        stats["rejections"] += 1
+                        continue  # same slot, next request
+                    matched, covered = (alloc.match_prefix(adm) if share
+                                        else ([], 0))
+                    need_new = need - len(matched)
+                    if covered == total and total % page_size:
+                        # the first decode write will CoW the matched tail
+                        need_new += 1
+                    if not alloc.can_admit(page_size * (need_new + reserved),
+                                           reclaimable=_reclaimable()):
+                        blocked = True  # FIFO head blocks; no skip-ahead
+                        break
+                    reserved += need_new
+                pending.popleft()
+                admits.append((s, rid, adm, len(em)))
+                break
         by_len = {}
-        for adm in admits:
-            by_len.setdefault(len(adm[2]), []).append(adm)
+        for adm_t in admits:
+            by_len.setdefault(len(adm_t[2]), []).append(adm_t)
         for plen in sorted(by_len):
             group = by_len[plen]
             block = np.zeros((batch, plen), np.int32)
             slots = np.full(batch, -1, np.int32)
-            for i, (s, _, prompt) in enumerate(group):
-                block[i] = prompt
+            for i, (s, _, adm, _) in enumerate(group):
+                block[i] = adm
                 slots[i] = s
             csize = plen if prefill_chunk is None else min(prefill_chunk, plen)
             mini = mini_zero
@@ -442,28 +752,58 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                 stats["prefills"] += 1
                 if active.any():
                     prefill_gap[0] += min(csize, plen - start)
+            placed = [True] * len(group)
+            requeue = []
             if paged:
                 # page-pointer admission: match the prompt against registered
                 # prefixes, take fresh pages for the rest, and graft ONLY the
                 # unshared suffix tokens out of the mini cache — matched
                 # pages are already resident in the pool.
                 total = plen + n_prefix
-                max_pages_row = cache["page_table"].shape[1]
                 rows_l, toks_l, pages_l, offs_l = [], [], [], []
+                cow_src, cow_dst = [], []
                 table_rows = np.zeros((len(group), max_pages_row), np.int64)
-                for i, (s, rid, prompt) in enumerate(group):
-                    # covers the prompt + this request's own decode writes; a
-                    # budget <= 1 request never decodes, so clamping to the
-                    # table width never drops a page that would be written
-                    need = min(-(-(total + max(1, gen_lens[rid])) // page_size),
-                               max_pages_row)
-                    matched, covered = alloc.match_prefix(prompt) if share else ([], 0)
-                    # partial-page keys are exact-tail, so a matched partial
-                    # page always covers the whole prompt: the graft below
-                    # never appends into a shared page
-                    assert covered == total or covered % page_size == 0, (covered, total)
+                cow_reserve = 0  # pages earlier members' pass-2 CoWs will take
+                for i, (s, rid, adm, n_em) in enumerate(group):
+                    need = total // page_size + 1
+                    will_decode = gen_lens[rid] - n_em - 1 > 0
+                    while True:
+                        matched, covered = (alloc.match_prefix(adm) if share
+                                            else ([], 0))
+                        # partial-page keys are exact-tail, so a matched
+                        # partial page always covers the whole prompt: the
+                        # graft below never appends into a shared page
+                        assert covered == total or covered % page_size == 0, \
+                            (covered, total)
+                        cow_tail = (will_decode and covered == total
+                                    and total % page_size != 0)
+                        need_new = need - len(matched) + (1 if cow_tail else 0)
+                        if need_new + cow_reserve <= alloc.free_pages():
+                            break
+                        if not free_up(need_new + cow_reserve):
+                            matched = None
+                            break
+                        # free_up's victims may have freed registered pages:
+                        # re-match before trusting the matched list
+                    if matched is None:
+                        # the watermark admitted optimistically but the pool
+                        # moved under us: back out, requeue at the head
+                        slots[i] = -1
+                        placed[i] = False
+                        requeue.append(rid)
+                        continue
                     alloc.retain(matched)
                     plist = matched + alloc.alloc(need - len(matched))
+                    if cow_tail:
+                        # the +1 in need_new is NOT allocated here — the CoW
+                        # happens in the second pass, after every member has
+                        # matched; carry the reservation so later members'
+                        # fresh allocations can't eat the page out from under
+                        # it (group CoWs never exceed group reservations: a
+                        # shared write page is always a matched partial tail)
+                        cow_reserve += 1
+                    if share:
+                        alloc.register_prefix(adm, plist[:-(-plen // page_size)])
                     slot_pages[s] = plist
                     table_rows[i, :len(plist)] = plist
                     for p in range(covered, total):
@@ -471,12 +811,51 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                         toks_l.append(p)
                         pages_l.append(plist[p // page_size])
                         offs_l.append(p % page_size)
-                    if share:
-                        alloc.register_prefix(prompt, plist[:-(-plen // page_size)])
-                srows = jnp.asarray([s for s, _, _ in group])
+                # second placement pass — AFTER every member has matched and
+                # registered, so identical same-group prompts share their
+                # partial tail before anyone mutates it: resolve each
+                # member's first-decode-write hazard (pos == total) inside
+                # the reservation cow_tail sized — CoW a shared write page,
+                # unpublish an owned registered tail.  The graft never
+                # touches page widx when a CoW happens (covered == total
+                # means nothing is grafted), so coords stay valid.
+                widx = total // page_size
+                for i, (s, rid, adm, n_em) in enumerate(group):
+                    if not placed[i] or gen_lens[rid] - n_em - 1 <= 0:
+                        continue
+                    plist = slot_pages[s]
+                    p = plist[widx]
+                    if alloc.shared(p):
+                        newp = alloc.cow(p)
+                        cow_src.append(p)
+                        cow_dst.append(newp)
+                        plist[widx] = newp
+                        table_rows[i, widx] = newp
+                    else:
+                        alloc.invalidate(p)
+                if plan.take("graft"):
+                    # simulated graft failure, injected BEFORE the donating
+                    # graft call: the device cache is untouched, so recovery
+                    # is pure bookkeeping — back out every placement and
+                    # requeue the whole group at the queue head
+                    for i, (s, rid, adm, n_em) in enumerate(group):
+                        if placed[i]:
+                            alloc.release(slot_pages[s])
+                            slot_pages[s] = []
+                            placed[i] = False
+                    for rid in reversed([r for _, r, _, _ in group]):
+                        pending.appendleft((rid, prompts[rid]))
+                    continue
+                srows = jnp.asarray([s for s, _, _, _ in group])
                 cache["page_table"] = cache["page_table"].at[srows].set(
                     jnp.asarray(table_rows, jnp.int32))
                 cache["pos"] = cache["pos"].at[srows].set(total)
+                for src, dst in zip(cow_src, cow_dst):
+                    # matched pages are already resident, so the CoW copy
+                    # can run before the graft (which only writes fresh
+                    # pages)
+                    cache = copy_fn(cache, jnp.asarray([src]),
+                                    jnp.asarray([dst]))
                 # pad the graft to one fixed bucket per prompt length (the
                 # padding re-writes mini token (0, 0) into the trash page)
                 # so ragged admission counts don't retrace the jit
@@ -488,60 +867,87 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                 tok_dev = tok_dev.at[safe].set(tok0, mode="drop")
                 sample_pages()
             else:
+                if plan.take("graft"):
+                    for rid in reversed([r for _, r, _, _ in group]):
+                        pending.appendleft((rid, prompts[rid]))
+                    continue
                 cache, tok_dev = admit_fn(cache, mini, jnp.asarray(slots), tok_dev, tok0)
+            for rid in reversed(requeue):
+                # placement-failed members go back to the queue head in
+                # their original order
+                pending.appendleft((rid, prompts[rid]))
             tok0_np = np.asarray(tok0)[:, 0]  # sync BEFORE stamping TTFT
             t_first = time.time() - t0
-            for i, (s, rid, _) in enumerate(group):
-                stats["ttft"][rid] = t_first
-                stats["admit_step"][rid] = stats["decode_steps"]
-                if not _record_token(stats, rid, int(tok0_np[i]), eos, gen_lens[rid] - 1):
+            for i, (s, rid, adm, n_em) in enumerate(group):
+                if not placed[i]:
+                    continue
+                if stats["ttft"][rid] is None:
+                    # a resumed request keeps its FIRST admission's TTFT and
+                    # admit step — the preemption cost shows up in latency,
+                    # not as a fresh arrival
+                    stats["ttft"][rid] = t_first
+                    stats["admit_step"][rid] = stats["decode_steps"]
+                rem = gen_lens[rid] - n_em - 1
+                if not _record_token(stats, rid, int(tok0_np[i]), eos, rem,
+                                     preempted=preempted_ever[rid]):
                     active[s] = True
                     slot_req[s] = rid
-                    slot_left[s] = gen_lens[rid] - 1
+                    slot_left[s] = rem
+                    slot_admit_seq[s] = admit_seq[0]
+                    admit_seq[0] += 1
+                    if paged:
+                        slot_pos[s] = plen + n_prefix
             if paged:
-                for i, (s, rid, _) in enumerate(group):
-                    plist = slot_pages[s]
-                    if not active[s]:
+                for i, (s, rid, _, _) in enumerate(group):
+                    if placed[i] and not active[s]:
                         # finished on its prefill token: nothing will ever be
                         # decoded into these pages
-                        alloc.release(plist)
+                        alloc.release(slot_pages[s])
                         slot_pages[s] = []
                         cache["page_table"] = cache["page_table"].at[s].set(
                             paging.TRASH_PAGE)
-                        continue
-                    # the first decode write lands at pos == total: resolve
-                    # the write hazard on that page ONCE here instead of
-                    # checking every step — copy-on-write if another slot
-                    # shares it, unpublish it if we registered its tail
-                    widx = (plen + n_prefix) // page_size
-                    p = plist[widx]
-                    if alloc.shared(p):
-                        newp = alloc.cow(p)
-                        cache = copy_fn(cache, jnp.asarray([p]), jnp.asarray([newp]))
-                        plist[widx] = newp
-                        cache["page_table"] = cache["page_table"].at[s, widx].set(newp)
-                    else:
-                        alloc.invalidate(p)
                 sample_pages()
             # refresh the device mask per GROUP (not per round): a later
             # group's chunk-boundary decode must advance this group's slots
             active_dev = jnp.asarray(active)
+            dirty[0] = False
         if not active.any():
             continue  # remaining pending requests all finished at prefill
         decode_round()
+    if paged:
+        sample_pages()
+        # conservation at end-of-serve ALWAYS (cheap): every page must be
+        # back on the free list — a leak here is a real production bug even
+        # when nothing was injected
+        alloc.leak_check()
+    stats["faults_fired"] = list(plan.fired)
+    stats["faults_unfired"] = plan.pending()
     return _finalize(stats, occ, t0)
 
 
 def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
-                 page_size=None):
+                 page_size=None, deadline_ms=None, pool_pages=None,
+                 check_invariants=False, plan=None):
     """Batch-at-a-time baseline: a finished sequence's slot idles until the
     whole batch drains.  The queue is still served strictly FIFO.
 
     page_size stores each group's KV paged (fresh pages per slot, released
-    when the group drains).  No prefix sharing here — all slots prefill into
-    their pages in one launch, so there is nothing admitted "earlier" to
-    share with; the capacity multiplier stays 1.0 by construction and the
-    continuous scheduler is where dedupe pays."""
+    as each member finishes).  No prefix sharing here — all slots prefill
+    into their pages in one launch, so there is nothing admitted "earlier"
+    to share with; the capacity multiplier stays 1.0 by construction and
+    the continuous scheduler is where dedupe pays.
+
+    Robustness layer (ISSUE 8).  Rows reserve only the pages the prompt +
+    first decode write need and GROW on demand at page boundaries; group
+    size is capped so every member's reservation fits the pool.  A growth
+    (or injected) allocation failure preempts the NEWEST live member —
+    batch-at-a-time admission cannot re-enter mid-stream (uniform prompt
+    lengths), so preemption here is a FULL recompute: the victim's emitted
+    tokens are discarded and its request re-served from the original prompt
+    in a later group, which greedy decoding makes bit-identical.  Deadlines
+    cut at decode-round boundaries; `plan` injects the same fault kinds as
+    the continuous scheduler."""
+    plan = plan if plan is not None else faults_lib.FaultPlan({})
     nreq = len(prompts)
     prompt_len = len(prompts[0])
     if any(len(p) != prompt_len for p in prompts):
@@ -557,38 +963,55 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     params = _quantize_params(tf.init_params(jax.random.PRNGKey(seed), cfg), quantize)
     prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg), donate_argnums=(2,))
     decode_fn = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(2,))
+    decode_faulted = {
+        kind: jax.jit(steps_lib.make_serve_step(cfg, act_fault=val),
+                      donate_argnums=(2,))
+        for kind, val in (("nan", float("nan")), ("inf", float("inf")))
+        if kind in plan.events
+    }
 
     paged = page_size is not None
     if paged:
         max_pages = -(-cache_len // page_size)
-        num_pages = 1 + batch * max_pages
-
-    def group_cache():
-        """Fresh cache for one group: every slot (padding rows included —
-        they decode garbage until the drain) gets its own page run."""
-        if not paged:
-            return tf.init_cache(cfg, batch, cache_len, enc_frames=enc)
-        cache = tf.init_cache(cfg, batch, cache_len, enc_frames=enc,
-                              page_size=page_size, num_pages=num_pages)
-        galloc = paging.PageAllocator(num_pages, page_size)
-        table = np.stack([galloc.alloc(max_pages) for _ in range(batch)])
-        cache["page_table"] = jnp.asarray(table, jnp.int32)
-        stats["pages_live"] = max(stats["pages_live"], galloc.pages_live())
-        stats["paged_capacity_multiplier"] = max(
-            stats["paged_capacity_multiplier"], galloc.capacity_multiplier())
-        return cache
+        num_pages = pool_pages if pool_pages is not None else 1 + batch * max_pages
+        # pages through the first decode write; later writes grow on demand
+        need_admit = prompt_len // page_size + 1
 
     pending = collections.deque(enumerate(prompts))
     stats = _new_stats(nreq)
+    preempted_ever = [False] * nreq
     if paged:
         stats.update({"kv_page_size": page_size, "pages_live": 0,
                       "pages_shared": 0, "paged_capacity_multiplier": 0.0,
                       "cow_copies": 0})
 
+    def group_cache(nact):
+        """Fresh cache for one group: the nact live rows get page runs
+        covering prompt + first decode write; padding (and later, finished)
+        rows route every access to the trash page."""
+        if not paged:
+            return tf.init_cache(cfg, batch, cache_len, enc_frames=enc), None, None
+        cache = tf.init_cache(cfg, batch, cache_len, enc_frames=enc,
+                              page_size=page_size, num_pages=num_pages)
+        galloc = paging.PageAllocator(num_pages, page_size)
+        row_pages = [galloc.alloc(need_admit) if i < nact else []
+                     for i in range(batch)]
+        table = np.zeros((batch, cache["page_table"].shape[1]), np.int64)
+        for i in range(nact):
+            table[i, :len(row_pages[i])] = row_pages[i]
+        cache["page_table"] = jnp.asarray(table, jnp.int32)
+        stats["pages_live"] = max(stats["pages_live"], galloc.pages_live())
+        stats["paged_capacity_multiplier"] = max(
+            stats["paged_capacity_multiplier"], galloc.capacity_multiplier())
+        return cache, galloc, row_pages
+
     # compile outside the timed region, mirroring the continuous scheduler
     warm_in = {"tokens": jnp.zeros((batch, prompt_len), jnp.int32)}
     warm_in.update(_prefill_extras(cfg, rng, batch, enc))
-    warm_tok, warm_cache = prefill_fn(params, warm_in, group_cache())
+    # warm with ZERO live rows (all-trash table): same trace, and a pool too
+    # small for a full group — or for any group at all — must reject at
+    # admission time, not blow up allocating a throwaway warmup cache
+    warm_tok, warm_cache = prefill_fn(params, warm_in, group_cache(0)[0])
     warm_tok, warm_cache = decode_fn(params, warm_tok, warm_cache)
     jax.block_until_ready(warm_tok)
     del warm_cache, warm_tok
@@ -597,31 +1020,126 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     t0 = time.time()
 
     while pending:
-        group = [pending.popleft() for _ in range(min(batch, len(pending)))]
+        if paged:
+            if need_admit > num_pages - 1:
+                # no request can fit even a fully-free pool (uniform prompt
+                # lengths: if one cannot, none can) — reject, never hang
+                while pending:
+                    rid, _ = pending.popleft()
+                    stats["status"][rid] = "rejected"
+                    stats["rejections"] += 1
+                break
+            # cap the group so every member's reservation fits up front;
+            # growth pressure during the drain is resolved by preemption
+            gsize = min(batch, (num_pages - 1) // need_admit, len(pending))
+        else:
+            gsize = min(batch, len(pending))
+        group = [pending.popleft() for _ in range(gsize)]
         nact = len(group)
         prompt_block = np.stack(
             [p for _, p in group] + [np.zeros(prompt_len, np.int32)] * (batch - nact)
         )
         batch_in = {"tokens": jnp.asarray(prompt_block)}
         batch_in.update(_prefill_extras(cfg, rng, batch, enc))
-        cache = group_cache()
+        cache, galloc, row_pages = group_cache(nact)
         tok, cache = prefill_fn(params, batch_in, cache)
         stats["prefills"] += 1
         tok_np = np.asarray(tok)[:, 0]  # sync BEFORE stamping TTFT
         done = np.zeros(batch, bool)
         done[nact:] = True
         left = np.zeros(batch, np.int64)
+
+        def release_row(i):
+            nonlocal cache
+            galloc.release(row_pages[i])
+            row_pages[i] = []
+            cache["page_table"] = cache["page_table"].at[i].set(paging.TRASH_PAGE)
+
+        def preempt_row(i):
+            """Full-recompute preemption: discard the victim's emitted
+            tokens and re-serve its original prompt in a later group."""
+            rid = group[i][0]
+            stats["preemptions"] += 1
+            preempted_ever[rid] = True
+            stats["tokens"] -= len(stats["outputs"][rid])
+            stats["outputs"][rid] = []
+            done[i] = True
+            if paged:
+                release_row(i)
+            pending.appendleft(group[i])
+
         t_first = time.time() - t0
         for i, (rid, _) in enumerate(group):
-            stats["ttft"][rid] = t_first
-            stats["admit_step"][rid] = stats["decode_steps"]
+            if stats["ttft"][rid] is None:
+                # a re-served (preempted) request keeps its FIRST ttft
+                stats["ttft"][rid] = t_first
+                stats["admit_step"][rid] = stats["decode_steps"]
             left[i] = gen_lens[rid] - 1
-            done[i] = _record_token(stats, rid, int(tok_np[i]), eos, left[i])
+            done[i] = _record_token(stats, rid, int(tok_np[i]), eos, left[i],
+                                    preempted=preempted_ever[rid])
+            if done[i] and paged:
+                release_row(i)
         last_decode = None  # batch boundary: nobody is live across it
+        steps_in_group = 0
         while not done.all():
+            step_idx = stats["decode_steps"]
+            for i, (rid, _) in enumerate(group):
+                if not done[i] and _deadline_expired(deadline_ms, rid, t0):
+                    _timeout(stats, rid)
+                    done[i] = True
+                    if paged:
+                        release_row(i)
+            if plan.at_step("preempt", step_idx):
+                live = [i for i in range(nact) if not done[i]]
+                if live:
+                    preempt_row(live[-1])
+            if paged:
+                # grow every live row's run to cover this round's write
+                widx = (prompt_len + steps_in_group) // page_size
+                for i in range(nact):
+                    if done[i] or widx < len(row_pages[i]):
+                        continue
+                    if plan.take("exhaust"):
+                        preempt_row([j for j in range(nact) if not done[j]][-1])
+                        if done[i]:
+                            continue
+                    while not galloc.free_pages() and not done[i]:
+                        live = [j for j in range(nact) if not done[j]]
+                        if live == [i]:
+                            # i already owns every pool page and still needs
+                            # more: a full recompute can never help — this
+                            # sequence simply does not fit the pool.
+                            # Terminal rejection, never a requeue livelock.
+                            rid = group[i][0]
+                            stats["tokens"] -= len(stats["outputs"][rid])
+                            stats["outputs"][rid] = []
+                            stats["status"][rid] = "rejected"
+                            stats["rejections"] += 1
+                            done[i] = True
+                            release_row(i)
+                            break
+                        preempt_row(live[-1])
+                    if done[i]:
+                        continue
+                    newp = galloc.alloc(1)[0]
+                    row_pages[i].append(newp)
+                    cache["page_table"] = cache["page_table"].at[i, widx].set(newp)
+            if done.all():
+                break
+            if plan.at_step("qscale", step_idx) and "k_scale" in cache:
+                live = [i for i in range(nact) if not done[i]]
+                loc = ((row_pages[live[0]][0] if paged else live[0])
+                       if live else 0)
+                arr = cache["k_scale"]
+                cache["k_scale"] = arr.at[(0, loc) + (0,) * (arr.ndim - 2)].set(jnp.inf)
+            fn = decode_fn
+            for kind in ("nan", "inf"):
+                if plan.at_step(kind, step_idx):
+                    fn = decode_faulted[kind]
             occ.append((~done).sum() / batch)
-            tok, cache = decode_fn(params, tok, cache)
+            tok, cache = fn(params, tok, cache)
             stats["decode_steps"] += 1
+            steps_in_group += 1
             now = time.time()
             if last_decode is not None:
                 stats["max_stall_ms"] = max(stats["max_stall_ms"],
@@ -632,7 +1150,23 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                 if done[i]:
                     continue
                 left[i] -= 1
-                done[i] = _record_token(stats, rid, int(tok_np[i]), eos, left[i])
+                done[i] = _record_token(stats, rid, int(tok_np[i]), eos, left[i],
+                                        preempted=preempted_ever[rid])
+                if done[i] and paged:
+                    release_row(i)
+            if paged:
+                stats["pages_live"] = max(stats["pages_live"], galloc.pages_live())
+            if check_invariants:
+                faults_lib.check_serve_invariants(
+                    alloc=galloc, table=cache.get("page_table"),
+                    active=[not d for d in done],
+                    slot_pages=row_pages if paged else None, cache=cache)
+        if paged:
+            # conservation at every group drain: all of the group's pages
+            # must be back on the free list
+            galloc.leak_check()
+    stats["faults_fired"] = list(plan.fired)
+    stats["faults_unfired"] = plan.pending()
     return _finalize(stats, occ, t0)
 
 
@@ -672,13 +1206,35 @@ def main():
                     help="paged continuous scheduler: hash admitted prompts "
                          "page by page and back a matched prefix with the "
                          "SAME physical pages (copy-on-write on divergence)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="override the paged pool size (0 = sized so "
+                         "exhaustion cannot happen).  Small pools exercise "
+                         "the backpressure/preemption path: admission blocks "
+                         "at the watermark and page-growth failures preempt "
+                         "the newest slot, whose request is recomputed "
+                         "bit-identically")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request wall-clock deadline, enforced at "
+                         "decode-round boundaries (status 'timeout'; "
+                         "emitted tokens are kept)")
+    ap.add_argument("--check-invariants", action="store_true",
+                    help="run the page-refcount/table/finiteness invariant "
+                         "sweep every decode round (launch/faults.py)")
+    ap.add_argument("--faults", default=os.environ.get(faults_lib.FAULTS_ENV, ""),
+                    help="deterministic fault plan, e.g. 'exhaust@2,nan@5' "
+                         f"(default: ${faults_lib.FAULTS_ENV}); kinds: "
+                         f"{', '.join(faults_lib.KINDS)}")
     args = ap.parse_args()
     serve(args.arch, args.variant, args.requests, args.batch, args.prompt_len,
           args.gen, backend=args.backend, scheduler=args.scheduler,
           quantize=args.quantize, kv_cache=args.kv_cache,
           prefill_chunk=args.prefill_chunk or None,
           kv_page_size=args.kv_page_size or None,
-          prefix_reuse=args.prefix_reuse == "on")
+          prefix_reuse=args.prefix_reuse == "on",
+          pool_pages=args.pool_pages or None,
+          deadline_ms=args.deadline_ms,
+          check_invariants=args.check_invariants,
+          faults=args.faults or None)
 
 
 if __name__ == "__main__":

@@ -64,19 +64,24 @@ def make_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig):
+def make_serve_step(cfg: ModelConfig, act_fault=None):
     """One greedy decode step: (params, token (B,1), cache) -> (token, cache).
-    Jit with donate_argnums=(2,) so the cache updates in place."""
+    Jit with donate_argnums=(2,) so the cache updates in place.
+    act_fault (static): fault-injection harness only — builds a POISONED
+    variant of the step that adds NaN/Inf into the post-embedding
+    activations (see transformer.forward); serve swaps it in for exactly
+    the decode rounds a FaultPlan names."""
 
     def serve_step(params, token, cache):
-        logits, cache = tf.decode_step(params, token, cache, cfg)
+        logits, cache = tf.decode_step(params, token, cache, cfg,
+                                       act_fault=act_fault)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return next_tok, cache
 
     return serve_step
 
 
-def make_decode_step_slots(cfg: ModelConfig):
+def make_decode_step_slots(cfg: ModelConfig, act_fault=None):
     """Masked continuous-batching decode step over the ragged slot grid.
 
     (params, token (B,1), cache{pos: (B,)}, active (B,) bool) -> (token, cache).
@@ -88,11 +93,13 @@ def make_decode_step_slots(cfg: ModelConfig):
     its KV row while it waits for the next admission; its (discarded) write
     lands on a position that the admission graft wipes anyway.
     Jit with donate_argnums=(2,) so the cache updates in place.
+    act_fault (static): see `make_serve_step` — the fault-injection variant.
     """
 
     def decode_step_slots(params, token, cache, active):
         pos0 = cache["pos"]
-        logits, cache = tf.decode_step(params, token, cache, cfg)
+        logits, cache = tf.decode_step(params, token, cache, cfg,
+                                       act_fault=act_fault)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         cache = {**cache, "pos": jnp.where(active, pos0 + 1, pos0)}
         return next_tok, cache

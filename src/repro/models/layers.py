@@ -64,13 +64,16 @@ def quantize_weights(params: dict, spec: "quant.QuantSpec" = None) -> dict:
 def _quantize_leaf(key, leaf, spec: "quant.QuantSpec", in_expert: bool):
     if key not in QUANT_WEIGHT_KEYS or not hasattr(leaf, "ndim"):
         return leaf
+    # weight packing happens once, on concrete arrays, at serve startup:
+    # validate so a NaN/Inf weight fails loudly HERE, not as a non-finite
+    # scale corrupting every decode step (the quantize degenerate contract)
     if in_expert and leaf.ndim >= 3:
         # expert-stacked (.., E, d, f): consumed as a batched GEMM right-hand
         # side — keep the (k, n) orientation, per-expert block scales
         espec = quant.QuantSpec(block_m=spec.block_m, block_n=spec.block_n,
                                 transpose=False)
-        return quant.quantize(leaf, espec)
-    return quant.quantize(leaf, spec)
+        return quant.quantize(leaf, espec, validate=True)
+    return quant.quantize(leaf, spec, validate=True)
 
 
 # --------------------------------------------------------------------------

@@ -215,14 +215,22 @@ def _scan_blocks(params_stacked, x, body, cfg: ModelConfig, cache=None):
     return x, aux, new_cache
 
 
-def forward(params, batch, cfg: ModelConfig, cache=None):
+def forward(params, batch, cfg: ModelConfig, cache=None, act_fault=None):
     """batch: {"tokens": (B,T)} + family extras ("patches"/"frames").
-    Returns (hidden (B,T,d), aux_loss, new_cache)."""
+    Returns (hidden (B,T,d), aux_loss, new_cache).
+
+    act_fault (static, fault-injection harness only): a float added into the
+    post-embedding activations — launch.faults builds a SEPARATE jit'd step
+    with act_fault=nan/inf so one chosen decode round runs with corrupted
+    activations flowing through every layer, the KV write, and the logits,
+    exactly like a real numeric fault."""
     tokens = batch["tokens"]
     b, t = tokens.shape
     x = constrain(
         layers.embed(params["embed"], tokens, scale=cfg.embed_scale), "dp", "sp", None
     )
+    if act_fault is not None:
+        x = x + jnp.asarray(act_fault, x.dtype)
 
     prefix_len = None
     if cfg.family == "vlm" and "patches" in batch:
@@ -673,8 +681,10 @@ def prefill(params, batch, cache, cfg: ModelConfig):
     return logits, cache
 
 
-def decode_step(params, token, cache, cfg: ModelConfig):
-    """One decode step.  token (B, 1) int32.  Returns (logits (B,V), cache)."""
-    x, _, cache = forward(params, {"tokens": token}, cfg, cache=cache)
+def decode_step(params, token, cache, cfg: ModelConfig, act_fault=None):
+    """One decode step.  token (B, 1) int32.  Returns (logits (B,V), cache).
+    act_fault: see `forward` (fault-injection harness only)."""
+    x, _, cache = forward(params, {"tokens": token}, cfg, cache=cache,
+                          act_fault=act_fault)
     logits = _logits_chunk(params, x, cfg)[:, 0]
     return logits, cache
