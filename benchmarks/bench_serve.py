@@ -56,7 +56,71 @@ def rows(arch: str = "stablelm-1.6b", variant: str = "smoke", requests: int = 24
     out.extend(mixed_traffic_rows(arch, variant, seed=seed, backend=backend))
     out.extend(shared_prefix_rows(arch, variant, seed=seed, backend=backend))
     out.extend(preempt_recompute_rows(arch, variant, seed=seed, backend=backend))
+    out.extend(speculative_rows(arch, variant, seed=seed, backend=backend))
     return out
+
+
+def speculative_rows(arch: str = "stablelm-1.6b", variant: str = "smoke",
+                     requests: int = 4, batch: int = 4, prompt_len: int = 16,
+                     gen: int = 64, k: int = 4, seed: int = 0,
+                     backend: str = "xla"):
+    """Speculative decoding (ISSUE 9): self-drafted verify turns the decode
+    GEMVs into (k+1)-row skinny GEMMs, committing tokens/step = 1 + k*accept
+    and amortizing one weight stream over all of them.
+
+    The scenario is the regime speculation targets: prompts that drive
+    greedy decode into its repetitive tail (the behaviour real models show
+    on code/boilerplate; this model's greedy trajectory provably collapses
+    to a repeating suffix on broad-vocab prompts within a few tokens),
+    which the n-gram drafter then predicts near-perfectly — with gen=64
+    the repetitive regime dominates the measurement the way long
+    completions dominate real serving.  Parity is asserted, not sampled:
+    the --speculate k run
+    must emit BIT-IDENTICAL greedy tokens to --speculate 0 on BOTH
+    schedulers (acceptance only decides how many tokens arrive per step,
+    never which).  `spec_tokens_per_step` is the measured speedup knob CI
+    gates (> 1.2); the modeled rows translate it into the roofline's
+    per-token weight-byte reduction via
+    roofline.decode_byte_terms(draft_k=k, accept_rate=measured).
+    """
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 1000, size=(prompt_len,), dtype=np.int32)
+               for _ in range(requests)]
+    gen_lens = [gen] * requests
+    results = {}
+    for sched in ("continuous", "batch"):
+        kw = dict(batch=batch, prompts=prompts, gen_lens=gen_lens, seed=seed,
+                  eos=-1, verbose=False, backend=backend, scheduler=sched)
+        base = serve(arch, variant, **kw)
+        spec = serve(arch, variant, speculate=k, **kw)
+        assert spec["outputs"] == base["outputs"], \
+            f"{sched}: --speculate {k} diverged from plain greedy decode"
+        results[sched] = spec
+    spec = results["continuous"]
+    tps = spec["spec_tokens_per_step"]
+    acc = spec["spec_acceptance_rate"]
+
+    from repro.configs.base import ShapeCell
+    from repro.launch import roofline
+    from repro.models.registry import get_config
+
+    cfg = get_config(arch, "full")
+    cell = ShapeCell(f"decode_b{batch}_s4096", 4096, batch, "decode")
+    plain = roofline.decode_byte_terms(cfg, cell)
+    amort = roofline.decode_byte_terms(cfg, cell, draft_k=k, accept_rate=acc)
+    return [(
+        f"serve_speculative_k{k}",
+        round(tps, 4),
+        # plain floats so run.py's summary (and the CI gate) parse them
+        f"spec_tokens_per_step={tps:.4f};"
+        f"spec_token_parity=1.0;"
+        f"spec_acceptance_rate={acc:.4f};"
+        f"spec_tokens_per_step_batch={results['batch']['spec_tokens_per_step']:.4f};"
+        f"draft_k={float(k)};"
+        f"modeled_weight_bytes_ratio={plain['weights'] / amort['weights']:.4f};"
+        f"modeled_total_bytes_ratio={plain['total'] / amort['total']:.4f};"
+        f"accept_hist={'/'.join(str(c) for c in spec['spec_accept_hist'])}",
+    )]
 
 
 def preempt_recompute_rows(arch: str = "stablelm-1.6b", variant: str = "smoke",

@@ -45,9 +45,17 @@ JSON schema (schema_version 1):
                   "preempt_recompute_parity": float,  # 1.0 iff preempted
                                                 # requests recompute to the
                                                 # unfaulted run's exact tokens
-                  "fault_smoke_pass": float}    # 1.0 iff the injected
+                  "fault_smoke_pass": float,    # 1.0 iff the injected
                                                 # exhaustion fired, preempted,
                                                 # and conserved pages
+                  "spec_tokens_per_step": float,  # tokens committed per
+                                                # verify step under
+                                                # --speculate k (>1 = win)
+                  "spec_token_parity": float,   # 1.0 iff --speculate k
+                                                # emitted bit-identical
+                                                # greedy tokens on both
+                                                # schedulers
+                  "spec_acceptance_rate": float}  # accepted/proposed drafts
     }
 """
 
@@ -94,8 +102,18 @@ def _summarize(rows: list[dict]) -> dict:
     stall = {}
     paged = {}
     robust = {}
+    spec = {}
     for row in rows:
         m = row["metrics"]
+        if row["name"].startswith("serve_speculative_k"):
+            # speculative decoding (ISSUE 9): tokens committed per verify
+            # step (the amortization CI gates) + parity + acceptance — the
+            # bench asserts bit-identical greedy tokens itself and emits
+            # these as plain floats
+            spec = {k: m[k] for k in ("spec_tokens_per_step",
+                                      "spec_token_parity",
+                                      "spec_acceptance_rate")
+                    if isinstance(m.get(k), float)}
         if row["name"] == "serve_preempt_recompute":
             # preemption + exact recompute under injected exhaustion
             # (ISSUE 8): the bench asserts parity itself and emits 1.0 flags
@@ -170,6 +188,12 @@ def _summarize(rows: list[dict]) -> dict:
         # inside the bench and surfaced here for the CI schema gate
         "preempt_recompute_parity": robust.get("preempt_recompute_parity", 0.0),
         "fault_smoke_pass": robust.get("fault_smoke_pass", 0.0),
+        # speculative decoding (ISSUE 9): self-drafted verify windows turn
+        # decode GEMVs into skinny GEMMs; tokens/step is the weight-stream
+        # amortization factor, parity the correctness gate
+        "spec_tokens_per_step": spec.get("spec_tokens_per_step", 0.0),
+        "spec_token_parity": spec.get("spec_token_parity", 0.0),
+        "spec_acceptance_rate": spec.get("spec_acceptance_rate", 0.0),
     }
 
 

@@ -56,6 +56,37 @@ def use_backend(name: str):
         set_backend(old)
 
 
+def in_verify_window() -> bool:
+    return getattr(_state, "verify_window", False)
+
+
+@contextlib.contextmanager
+def verify_window():
+    """Mark every row of (B, t, d) inputs traced inside this block as a
+    DECODE token (a speculative verify window: last committed token + k
+    drafts), not prefill.
+
+    Speculative verification runs k+1 decode tokens per slot through one
+    launch, so projections that key numeric paths on shape alone would move
+    those tokens onto the prefill path — on the xla host backend that is
+    dequantize+f32-GEMM instead of the contiguous packed-int8 matvec, whose
+    different accumulation rounding can flip a near-tied greedy argmax and
+    break the bit-identical-tokens contract vs --speculate 0.  Under this
+    flag the quantized host path runs each window row through the SAME
+    per-token `quant.gemv_host` dot that plain decode uses, making verify
+    numerics per-row identical to decode numerics by construction.  The
+    pallas backend is unaffected: its bgemm tiles dequantize with the same
+    in-kernel scheme as bgemv, so the skinny-GEMM intensity shift keeps
+    bit-stable rows without a special case.
+    """
+    old = in_verify_window()
+    _state.verify_window = True
+    try:
+        yield
+    finally:
+        _state.verify_window = old
+
+
 def _acc_dtype(x: jnp.ndarray) -> jnp.dtype:
     # max(f32, operand dtype): low-precision inputs accumulate in f32 (MXU
     # style); f64 operands keep f64 accumulation (the D-prefix routines).
@@ -463,7 +494,8 @@ def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     if quantized:
         lead = x.shape[:-1]
         d, f = w.shape[-2:]
-        decode_shaped = x.ndim >= 3 and x.shape[-2] == 1
+        decode_shaped = x.ndim >= 3 and (x.shape[-2] == 1
+                                         or in_verify_window())
         xb = x.reshape(-1, d)
         if backend == "ref":
             from repro.kernels import ref
@@ -540,7 +572,8 @@ def matmul_fused(
         # xla/ref: packed host matvecs (or the dequantization oracle) feed
         # the identical epilogue semantic on the f32 accumulator
         d = x.shape[-1]
-        decode_shaped = x.ndim >= 3 and x.shape[-2] == 1
+        decode_shaped = x.ndim >= 3 and (x.shape[-2] == 1
+                                         or in_verify_window())
         xb = x.reshape(-1, d)
         if backend == "ref":
             from repro.kernels import ref

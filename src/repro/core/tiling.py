@@ -134,12 +134,24 @@ def rank_block_shapes(
     traffic-modelled at their true packed width, which makes bigger blocks
     feasible and raises the achievable flops/HBM-byte exactly as the
     quantization is supposed to.
+
+    SKINNY M (m below one MXU tile — speculative verify windows run
+    (k+1)-row GEMMs per slot, k+1 <= 8 typically): a full 128-row bm tile
+    would pad >90% dead rows, so the SUBLANE-aligned extent round_up(m, 8)
+    joins the bm candidates.  Ranking credits only the REAL rows as flops
+    (eff_m = min(bm, round_up(m, 8))) while charging the full bm tile's
+    bytes, so the skinny tile wins exactly when it should: same useful
+    flops, 16x less A-tile traffic, and the freed VMEM buys wider bn/bk —
+    which is where the intensity actually comes from when m is tiny.
     """
     b_bytes = dtype_bytes if b_dtype_bytes is None else b_dtype_bytes
+    m_pad = round_up(m, SUBLANE)
+    bm_cands = ([m_pad] if m_pad < MXU_DIM else []) + list(candidates)
     ranked: list[tuple[float, int, int, int, BlockShape]] = []
-    for bm in candidates:
+    for bm in bm_cands:
         if bm > round_up(m, MXU_DIM):
             continue
+        eff_m = min(bm, m_pad)
         for bn in candidates:
             if bn > round_up(n, MXU_DIM):
                 continue
@@ -159,7 +171,7 @@ def rank_block_shapes(
                                             residual=residual)
                 if used > vmem_budget:
                     continue
-                ai = (2 * bm * bn * bk) / (
+                ai = (2 * eff_m * bn * bk) / (
                     bm * bk * dtype_bytes + bk * bn * b_bytes
                 )
                 ranked.append((-ai, -bk, bm, bn, cand))

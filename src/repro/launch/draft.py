@@ -1,0 +1,91 @@
+"""Self-drafting proposers for speculative decoding (no second model).
+
+Speculative decoding needs k candidate tokens per slot per verify round.
+Anything may propose them — correctness never depends on the proposals
+because the verify step accepts exactly the longest prefix the real model
+would have emitted greedily (launch/steps.py: make_verify_step_slots), so a
+bad draft costs only wasted verify FLOPs, never a wrong token.
+
+The default proposer here is prompt-lookup / n-gram drafting: continue the
+slot's context from the most recent PRIOR occurrence of its trailing
+n-gram.  Greedy LLM output is heavily repetitive (templated text, code,
+retrieved spans, and — degenerately — the repetition loops small models
+fall into), so the next tokens very often already appear verbatim earlier
+in prompt + emitted tokens.  It is deterministic, has no parameters, and
+costs a few microseconds of host time per slot per round — the cheapest
+possible drafter that still buys a real acceptance rate, and the natural
+baseline for a future truncated-layer draft pass over the same packed
+weights (register it under a new name in `make_drafter`).
+
+API contract (what `serve` relies on):
+- `begin(rid, context)` (re)sets a request's context to the given tokens
+  (prompt, or prompt + already-emitted on recompute).
+- `observe(rid, tok)` appends one ACCEPTED token — called exactly once per
+  token the scheduler records, so the drafter's context mirrors the
+  canonical greedy stream.
+- `propose(rid, k)` returns exactly k int candidate ids (padding is fine:
+  rejected drafts are free).
+- `forget(rid)` drops a finished/discarded request's context.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+
+class NgramDrafter:
+    """Prompt-lookup drafting: propose the continuation of the most recent
+    prior occurrence of the slot's trailing n-gram.
+
+    For each round, try the longest trailing n-gram first (max_ngram down
+    to 1); the first one with an earlier occurrence in the context wins and
+    the k tokens that followed it become the draft.  A continuation shorter
+    than k is padded by CYCLING it: when the trailing n-gram recurs p
+    tokens back, the available continuation IS one loop period, and cycling
+    it extrapolates the loop exactly — full acceptance on period-p
+    repetition instead of only period-1.  No match at any n falls back to
+    repeating the last context token — the degenerate guess that is
+    exactly right inside the constant runs greedy decoding produces.
+    """
+
+    def __init__(self, max_ngram: int = 3):
+        if max_ngram < 1:
+            raise ValueError(f"max_ngram must be >= 1, got {max_ngram}")
+        self.max_ngram = max_ngram
+        self._ctx: Dict[int, List[int]] = {}
+
+    def has(self, rid: int) -> bool:
+        return rid in self._ctx
+
+    def begin(self, rid: int, context: Sequence[int]) -> None:
+        self._ctx[rid] = [int(t) for t in context]
+
+    def observe(self, rid: int, tok: int) -> None:
+        self._ctx[rid].append(int(tok))
+
+    def forget(self, rid: int) -> None:
+        self._ctx.pop(rid, None)
+
+    def propose(self, rid: int, k: int) -> List[int]:
+        ctx = self._ctx[rid]
+        if not ctx:
+            return [0] * k
+        for n in range(min(self.max_ngram, len(ctx) - 1), 0, -1):
+            tail = ctx[-n:]
+            # most recent PRIOR occurrence: scan right-to-left, excluding
+            # the trailing occurrence itself
+            for i in range(len(ctx) - n - 1, -1, -1):
+                if ctx[i:i + n] == tail:
+                    cont = ctx[i + n:i + n + k]
+                    if cont:
+                        return [cont[j % len(cont)] for j in range(k)]
+                    break  # the match IS the tail's own start; try shorter n
+        return [ctx[-1]] * k
+
+
+def make_drafter(kind: str, **kw):
+    """Drafter factory — the pluggable seam a truncated-layer draft pass
+    slots into later without touching the scheduler."""
+    if kind == "ngram":
+        return NgramDrafter(**kw)
+    raise ValueError(f"unknown drafter {kind!r} (have: ngram)")

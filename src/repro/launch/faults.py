@@ -218,6 +218,37 @@ def check_cache_finite(cache: dict) -> None:
                 f"non-finite {what} in cache[{key!r}]")
 
 
+def check_write_window(alloc: paging.PageAllocator, active: Sequence[bool],
+                       slot_pages: Sequence[Sequence[int]],
+                       slot_pos: Sequence[int], page_size: int,
+                       horizon: int) -> None:
+    """Speculative-rollback safety (ISSUE 9): every page a verify round may
+    write — positions ``pos .. pos+horizon`` of every live slot, covering
+    all k+1 window candidates BEFORE the acceptance decision — must be
+    exclusively owned (refcount 1).  A rejected-draft write landing in a
+    page with refcount > 1 would silently corrupt the committed prefix of
+    every other slot sharing it; rollback only rewinds ``pos``, it never
+    undoes bytes.  The serving stack guarantees this structurally (admission
+    CoWs/unpublishes the first write page, growth pages come fresh off the
+    free list and are never registered), and the speculative schedulers run
+    this check every round to keep the guarantee honest.
+    """
+    for s, live in enumerate(active):
+        if not live:
+            continue
+        lo = int(slot_pos[s]) // page_size
+        hi = (int(slot_pos[s]) + horizon) // page_size
+        pages = slot_pages[s]
+        for pidx in range(lo, min(hi, len(pages) - 1) + 1):
+            p = pages[pidx]
+            if alloc.refcount(p) > 1:
+                raise InvariantViolation(
+                    f"slot {s}: write-window page {p} (run index {pidx}, "
+                    f"positions {pidx * page_size}..) has refcount "
+                    f"{alloc.refcount(p)} > 1 — a rejected speculative "
+                    f"write would mutate a shared page")
+
+
 def check_serve_invariants(*, alloc: Optional[paging.PageAllocator] = None,
                            table=None, active=None, slot_pages=None,
                            cache: Optional[dict] = None) -> None:

@@ -224,9 +224,25 @@ def analytic_hbm_bytes(cfg, cell, chips: int, microbatches: int = 1,
     return decode_byte_terms(cfg, cell, chips)["total"]
 
 
-def decode_byte_terms(cfg, cell, chips: int = 1, kv_page_size: int = 0) -> dict:
-    """Per-chip HBM bytes of ONE decode step, split into the roofline's
-    byte terms: {"weights", "kv", "page_table", "act", "total"}.
+def decode_byte_terms(cfg, cell, chips: int = 1, kv_page_size: int = 0,
+                      draft_k: int = 0, accept_rate: float = 1.0) -> dict:
+    """Per-chip HBM bytes of ONE EMITTED TOKEN of decode, split into the
+    roofline's byte terms: {"weights", "kv", "page_table", "act", "total"}.
+    With draft_k == 0 (plain decode) a step emits exactly one token, so
+    per-step and per-token coincide.
+
+    draft_k > 0 models SPECULATIVE decode (launch/serve.py --speculate k):
+    each verify step runs a (B, k+1)-token window through the model and
+    commits  tokens/step = 1 + draft_k * accept_rate  of them (accept_rate
+    = accepted drafts / proposed drafts, the measured spec_acceptance_rate).
+    One step still streams the weights ONCE and the KV cache/page table
+    ONCE — the flash kernel reads each KV block one time however many query
+    rows share it — so those terms divide by tokens/step: the whole point
+    of turning decode GEMVs into skinny GEMMs is that the dominant
+    weight-stream term amortizes over every accepted token.  Activation
+    I/O does NOT amortize: the window is (k+1) tokens wide whatever gets
+    accepted, so the act term scales by (k+1) / tokens_per_step — the byte
+    price of rejected drafts.
 
     This is the combined-quantization model the quantized bench asserts
     against: `cfg.weight_dtype="int8"` reprices the projection-weight stream
@@ -270,6 +286,14 @@ def decode_byte_terms(cfg, cell, chips: int = 1, kv_page_size: int = 0) -> dict:
             + n_occ * cell.global_batch * cell.seq_len * 2 * kv * hd * dt
         ) / chips
     act = layers * cell.global_batch * unit * dt / chips
+    if draft_k:
+        if not 0.0 <= accept_rate <= 1.0:
+            raise ValueError(f"accept_rate must be in [0, 1], got {accept_rate}")
+        tps = 1.0 + draft_k * accept_rate      # tokens committed per step
+        weights /= tps
+        cache /= tps
+        page_table /= tps
+        act *= (draft_k + 1) / tps
     return {"weights": weights, "kv": cache, "page_table": page_table,
             "act": act, "total": weights + cache + page_table + act}
 

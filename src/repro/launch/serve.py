@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blas
+from repro.launch import draft as draft_lib
 from repro.launch import faults as faults_lib
 from repro.launch import paging
 from repro.launch import steps as steps_lib
@@ -59,7 +60,8 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
           prefill_chunk: Optional[int] = None,
           kv_page_size: Optional[int] = None, prefix_reuse: bool = True,
           deadline_ms=None, pool_pages: Optional[int] = None,
-          check_invariants: bool = False, faults=None):
+          check_invariants: bool = False, faults=None,
+          speculate: Optional[int] = None):
     """Serve `requests` synthetic prompts through greedy decode.
 
     quantize="int8" packs every projection weight with block-scaled int8
@@ -123,6 +125,28 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
     A request that cannot fit even a fully-free pool is terminally
     "rejected".
 
+    speculate=k runs greedy SPECULATIVE decoding (ISSUE 9): every decode
+    round, each live slot verifies k self-drafted candidate tokens (n-gram
+    prompt-lookup over its own prompt + emitted stream, launch/draft.py —
+    no second model) in ONE forward pass over a (batch, k+1) window, and
+    commits the longest prefix that matches the model's own greedy argmax
+    (launch/steps.py: make_verify_step_slots).  The emitted token stream is
+    BIT-IDENTICAL to speculate=None by construction — the window's first
+    position is the plain decode step, and a draft is accepted only when
+    it equals exactly the token greedy decode would have picked — so draft
+    quality affects throughput only.  The win is arithmetic intensity: the
+    projection matvecs (Level-2, bandwidth-bound) become (batch, k+1, d)
+    skinny GEMMs amortizing one packed weight stream over k+1 tokens per
+    slot (the paper's Level-2 -> Level-3 reformulation applied at the
+    scheduler).  KV for all k+1 candidates is written quantized/paged as
+    usual; rejection is a per-slot `pos` rewind that leaves the dead tail
+    masked past `kv_lens` (never a cache wipe), and under paged KV a
+    write-window check enforces that rejected writes can never land in a
+    page shared with another slot (refcount > 1).  Composes with both
+    schedulers, --quantize int8, --kv-cache int8, --kv-page-size and
+    --prefill-chunk; stats gain spec_tokens_per_step (committed tokens per
+    slot per verify round), spec_acceptance_rate and spec_accept_hist.
+
     deadline_ms: per-request wall-clock budget (scalar or one per request),
     measured from serve start and enforced at decode-round boundaries — an
     expired request keeps its emitted tokens and finishes with status
@@ -179,6 +203,16 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
     if prefill_chunk is not None and scheduler != "continuous":
         raise ValueError("prefill_chunk interleaves admission chunks with "
                          "decode steps and needs --scheduler continuous")
+    if speculate is not None:
+        if speculate < 1:
+            raise ValueError(f"speculate needs >= 1 draft tokens, got "
+                             f"{speculate}")
+        if cfg.family not in tf.SLOT_CACHE_FAMILIES:
+            raise ValueError(
+                f"speculative decoding rewinds per-slot KV positions and "
+                f"supports {tf.SLOT_CACHE_FAMILIES} families; {cfg.family!r} "
+                f"has recurrent state that cannot roll back"
+            )
     if kv_page_size is not None:
         if kv_page_size < 1:
             raise ValueError(f"kv_page_size must be >= 1, got {kv_page_size}")
@@ -218,14 +252,14 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
                                       deadline_ms=deadline_ms,
                                       pool_pages=pool_pages,
                                       check_invariants=check_invariants,
-                                      plan=plan)
+                                      plan=plan, speculate=speculate)
         elif scheduler == "batch":
             stats = _serve_batch(cfg, prompts, list(gen_lens), batch, seed, eos,
                                  quantize, page_size=kv_page_size,
                                  deadline_ms=deadline_ms,
                                  pool_pages=pool_pages,
                                  check_invariants=check_invariants,
-                                 plan=plan)
+                                 plan=plan, speculate=speculate)
         else:
             raise ValueError(f"scheduler must be 'continuous' or 'batch', got {scheduler!r}")
     if verbose:
@@ -242,6 +276,10 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
                            f"{stats['timeouts']} timeouts")
         if stats.get("faults_fired"):
             robust_info += f", faults fired {stats['faults_fired']}"
+        if "spec_tokens_per_step" in stats:
+            robust_info += (f", spec {stats['spec_tokens_per_step']:.2f} "
+                            f"tok/step (accept "
+                            f"{stats['spec_acceptance_rate']:.2f})")
         print(f"[serve] {arch} ({scheduler}): {stats['completed']} requests, "
               f"{stats['tokens']} tokens in {stats['elapsed_s']:.2f}s -> "
               f"{stats['tok_s']:.1f} tok/s ({stats['prefills']} prefills, "
@@ -255,6 +293,12 @@ def _new_stats(nreq: int) -> dict:
     return {
         "completed": 0, "tokens": 0, "prefills": 0, "decode_steps": 0,
         "outputs": [[] for _ in range(nreq)],
+        # per-token arrival timestamps (seconds since serve start), one per
+        # outputs entry.  One verify round can commit SEVERAL tokens at a
+        # single wall-clock instant — they share the round's completion
+        # time — so TTFT/ITL percentiles stay truthful at speculate=k>1
+        # instead of pretending tokens arrived one per round.
+        "token_times": [[] for _ in range(nreq)],
         "ttft": [None] * nreq,
         "admit_step": [None] * nreq,
         "finish_step": [None] * nreq,
@@ -277,13 +321,17 @@ def _new_stats(nreq: int) -> dict:
 
 
 def _record_token(stats: dict, rid: int, tok_val: int, eos: int,
-                  remaining: int, preempted: bool = False) -> bool:
+                  remaining: int, preempted: bool = False,
+                  t_now=None) -> bool:
     """Append one generated token for request `rid`; returns True if the
     request just finished (EOS, or its budget has `remaining` <= 0 tokens
     left AFTER this one).  The single budget/EOS rule both schedulers use —
     keep it in one place so they cannot drift.  `preempted` marks whether
-    the request was ever preempted, for the terminal status."""
+    the request was ever preempted, for the terminal status.  `t_now` is
+    the token's arrival time (seconds since serve start): every accepted
+    token of a verify round shares the round's completion time."""
     stats["outputs"][rid].append(tok_val)
+    stats["token_times"][rid].append(t_now)
     stats["tokens"] += 1
     if tok_val == eos or remaining <= 0:
         stats["finish_step"][rid] = stats["decode_steps"]
@@ -313,6 +361,15 @@ def _finalize(stats: dict, occ: list, t0: float) -> dict:
     stats["elapsed_s"] = dt
     stats["tok_s"] = stats["tokens"] / dt if dt > 0 else 0.0
     stats["occupancy"] = float(np.mean(occ)) if occ else 0.0
+    if stats.get("spec_slot_steps"):
+        # committed tokens per slot per verify round — the structural
+        # amortization factor (1.0 would mean every draft was rejected and
+        # speculation degenerated to plain decode)
+        stats["spec_tokens_per_step"] = (stats["spec_emitted"]
+                                         / stats["spec_slot_steps"])
+        prop = stats["spec_drafts_proposed"]
+        stats["spec_acceptance_rate"] = (stats["spec_drafts_accepted"] / prop
+                                         if prop else 0.0)
     return stats
 
 
@@ -357,7 +414,7 @@ def _quantize_params(params, quantize: str):
 def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                       prefill_chunk=None, page_size=None, prefix_reuse=True,
                       deadline_ms=None, pool_pages=None,
-                      check_invariants=False, plan=None):
+                      check_invariants=False, plan=None, speculate=None):
     """Slot-level admission: finished sequences free their slot immediately;
     each free slot prefills the next FIFO request into the shared cache.
 
@@ -395,20 +452,39 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     invariants every round."""
     plan = plan if plan is not None else faults_lib.FaultPlan({})
     nreq = len(prompts)
-    cache_len = _cache_len(cfg, prompts, gen_lens)
+    spec = int(speculate or 0)
+    # speculate=k headroom: a verify round writes KV for all k+1 window
+    # positions before the acceptance decision, so the last live round may
+    # scribble up to k slots past a sequence's final committed position
+    # (the masked-dead tail rollback leaves behind)
+    cache_len = _cache_len(cfg, prompts, gen_lens) + spec
     rng = np.random.default_rng(seed + 1)
 
     params = _quantize_params(tf.init_params(jax.random.PRNGKey(seed), cfg), quantize)
     # the admission prefill's zero template is reused every round: no donation
     prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg))
-    decode_fn = jax.jit(steps_lib.make_decode_step_slots(cfg), donate_argnums=(2,))
-    # poisoned step variants, traced only when a NaN/Inf fault is scheduled
-    decode_faulted = {
-        kind: jax.jit(steps_lib.make_decode_step_slots(cfg, act_fault=val),
-                      donate_argnums=(2,))
-        for kind, val in (("nan", float("nan")), ("inf", float("inf")))
-        if kind in plan.events
-    }
+    if spec:
+        # speculative: the decode step IS the verify step — one (B, k+1)
+        # window launch per round; the plain step is never traced
+        decode_fn = jax.jit(steps_lib.make_verify_step_slots(cfg, spec),
+                            donate_argnums=(2,))
+        decode_faulted = {
+            kind: jax.jit(steps_lib.make_verify_step_slots(cfg, spec,
+                                                           act_fault=val),
+                          donate_argnums=(2,))
+            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
+            if kind in plan.events
+        }
+        drafter = draft_lib.make_drafter("ngram")
+    else:
+        decode_fn = jax.jit(steps_lib.make_decode_step_slots(cfg), donate_argnums=(2,))
+        # poisoned step variants, traced only when a NaN/Inf fault is scheduled
+        decode_faulted = {
+            kind: jax.jit(steps_lib.make_decode_step_slots(cfg, act_fault=val),
+                          donate_argnums=(2,))
+            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
+            if kind in plan.events
+        }
     mini_zero = tf.init_cache(cfg, batch, cache_len)
 
     paged = page_size is not None
@@ -448,8 +524,16 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         warm_cache, warm_tok = admit_fn(
             tf.init_cache(cfg, batch, cache_len, per_slot=True), warm_mini,
             jnp.zeros(batch, jnp.int32) - 1, jnp.zeros((batch, 1), jnp.int32), warm_tok0)
-    warm_tok, warm_cache = decode_fn(params, warm_tok, warm_cache, jnp.zeros(batch, bool))
-    jax.block_until_ready(warm_tok)
+    if spec:
+        warm_p, warm_a, warm_cache = decode_fn(
+            params, jnp.zeros((batch, spec + 1), jnp.int32), warm_cache,
+            jnp.zeros(batch, bool))
+        jax.block_until_ready(warm_p)
+        del warm_p, warm_a
+    else:
+        warm_tok, warm_cache = decode_fn(params, warm_tok, warm_cache,
+                                         jnp.zeros(batch, bool))
+        jax.block_until_ready(warm_tok)
     del warm_mini, warm_cache, warm_tok, warm_tok0
 
     pending = collections.deque(enumerate(prompts))  # FIFO: popleft serves arrival order
@@ -467,7 +551,8 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     slot_req = np.full(batch, -1)
     slot_left = np.zeros(batch, np.int64)
     slot_pos = np.zeros(batch, np.int64)        # next decode write position
-    slot_admit_seq = np.zeros(batch, np.int64)  # admission order (victim pick)
+    slot_last = np.zeros(batch, np.int64)       # last COMMITTED token (spec
+    slot_admit_seq = np.zeros(batch, np.int64)  # window pos 0); admit order
     admit_seq = [0]
     preempted_ever = [False] * nreq
     active = np.zeros(batch, bool)
@@ -479,6 +564,13 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         stats.update({"kv_page_size": page_size, "pages_live": 0,
                       "pages_shared": 0, "paged_capacity_multiplier": 0.0,
                       "cow_copies": 0})
+    if spec:
+        stats.update({"speculate": spec, "spec_slot_steps": 0,
+                      "spec_emitted": 0, "spec_drafts_proposed": 0,
+                      "spec_drafts_accepted": 0,
+                      # spec_accept_hist[a] = verify rounds (per slot) that
+                      # accepted exactly a of the k drafts
+                      "spec_accept_hist": [0] * (spec + 1)})
 
     def sample_pages():
         """Fold the allocator's current occupancy into the run peaks."""
@@ -500,6 +592,9 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         frozen slot's masked decode writes can never land in a recycled
         page.  Shared by finish, timeout and preemption."""
         nonlocal cache
+        if spec and slot_req[s] >= 0:
+            # preempted requests get a fresh begin() at re-admission
+            drafter.forget(int(slot_req[s]))
         active[s] = False
         slot_req[s] = -1
         dirty[0] = True
@@ -545,35 +640,40 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
             preempt(v)
         return True
 
-    def ensure_page(s):
-        """Grow slot s's page run to cover its next decode write.  An
-        injected (`exhaust@K`) or real allocation failure preempts a victim;
-        returns False iff s itself was the victim (skip its step)."""
+    def ensure_page(s, horizon=0):
+        """Grow slot s's page run to cover every write of the coming round:
+        positions slot_pos[s] .. slot_pos[s]+horizon (horizon=k under
+        speculation — the verify round writes all k+1 candidates before
+        acceptance).  An injected (`exhaust@K`) or real allocation failure
+        preempts a victim; returns False iff s itself was the victim (skip
+        its step).  The plain-decode case grows at most one page per call,
+        exactly the pre-speculation behavior."""
         nonlocal cache
-        pidx = int(slot_pos[s]) // page_size
-        if pidx < len(slot_pages[s]):
-            return True
-        assert pidx < max_pages_row, (pidx, max_pages_row)
-        if plan.take("exhaust"):
-            v = pick_victim()
-            if v is not None:
+        last_idx = (int(slot_pos[s]) + horizon) // page_size
+        assert last_idx < max_pages_row, (last_idx, max_pages_row)
+        while len(slot_pages[s]) <= last_idx:
+            pidx = len(slot_pages[s])
+            if plan.take("exhaust"):
+                v = pick_victim()
+                if v is not None:
+                    preempt(v)
+                    if v == s:
+                        return False
+            while not alloc.free_pages():
+                v = pick_victim()
+                if v is None:
+                    # unreachable while s itself is active (an active
+                    # decoding slot always owns its non-shared write page) —
+                    # kept as the honest failure mode rather than a silent
+                    # hang
+                    raise paging.PoolExhausted(
+                        f"growth for slot {s}: no free page and no victim")
                 preempt(v)
                 if v == s:
                     return False
-        while not alloc.free_pages():
-            v = pick_victim()
-            if v is None:
-                # unreachable while s itself is active (an active decoding
-                # slot always owns its non-shared write page) — kept as the
-                # honest failure mode rather than a silent hang
-                raise paging.PoolExhausted(
-                    f"growth for slot {s}: no free page and no victim")
-            preempt(v)
-            if v == s:
-                return False
-        newp = alloc.alloc(1)[0]
-        slot_pages[s].append(newp)
-        cache["page_table"] = cache["page_table"].at[s, pidx].set(newp)
+            newp = alloc.alloc(1)[0]
+            slot_pages[s].append(newp)
+            cache["page_table"] = cache["page_table"].at[s, pidx].set(newp)
         return True
 
     def poison_scale():
@@ -620,7 +720,15 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         if paged:
             for s in range(batch):
                 if active[s]:
-                    ensure_page(s)
+                    ensure_page(s, horizon=spec)
+            if spec:
+                # CoW hazard gate: every page a verify round may write must
+                # be exclusively owned — a rejected-draft write into a page
+                # with refcount > 1 would corrupt another slot's committed
+                # prefix.  Structural (admission CoWs/unpublishes the write
+                # page, growth pages are fresh), enforced every round.
+                faults_lib.check_write_window(alloc, active, slot_pages,
+                                              slot_pos, page_size, spec)
         if plan.at_step("qscale", step_idx):
             poison_scale()
         fn = decode_fn
@@ -634,9 +742,25 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         if not stepped.any():
             return
         occ.append(stepped.sum() / batch)
-        tok_dev, cache = fn(params, tok_dev, cache, active_dev)
+        if spec:
+            # verify window per live slot: [last committed token] + k
+            # drafts.  One H2D for the grid — the drafts are host state
+            # (n-gram lookup over prompt + emitted), so the steady-state
+            # zero-transfer property of plain decode is traded for the
+            # k+1-token GEMM amortization the window exists for.
+            win = np.zeros((batch, spec + 1), np.int32)
+            for s in range(batch):
+                if stepped[s]:
+                    win[s, 0] = slot_last[s]
+                    win[s, 1:] = drafter.propose(int(slot_req[s]), spec)
+            preds, acc, cache = fn(params, jnp.asarray(win), cache,
+                                   active_dev)
+            tok_np = np.asarray(preds)          # (B, k+1) greedy argmaxes
+            acc_np = np.asarray(acc)            # (B,) accepted draft counts
+        else:
+            tok_dev, cache = fn(params, tok_dev, cache, active_dev)
+            tok_np = np.asarray(tok_dev)[:, 0]
         stats["decode_steps"] += 1
-        tok_np = np.asarray(tok_dev)[:, 0]
         now = time.time()
         if last_decode[0] is not None:
             stats["max_stall_ms"] = max(stats["max_stall_ms"],
@@ -645,15 +769,45 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         stats["max_stall_prefill_tokens"] = max(
             stats["max_stall_prefill_tokens"], prefill_gap[0])
         prefill_gap[0] = 0
+        t_now = now - t0
         for s in range(batch):
             if not stepped[s]:
                 continue
-            slot_pos[s] += 1
-            slot_left[s] -= 1
             rid = slot_req[s]
-            if _record_token(stats, rid, int(tok_np[s]), eos, slot_left[s],
-                             preempted=preempted_ever[rid]):
-                free_slot(s)
+            if spec:
+                # longest-accepted-prefix commit: positions 0..acc are the
+                # model's own greedy picks (draft j accepted iff it equals
+                # pred j-1), position acc is the bonus token.  The device
+                # already rewound pos to pos0+acc+1; rejected writes sit in
+                # the masked-dead tail past kv_lens.  All committed tokens
+                # share this round's completion timestamp.
+                n_acc = int(acc_np[s])
+                stats["spec_slot_steps"] += 1
+                stats["spec_drafts_proposed"] += spec
+                stats["spec_drafts_accepted"] += n_acc
+                stats["spec_accept_hist"][n_acc] += 1
+                for tv in tok_np[s, :n_acc + 1]:
+                    slot_pos[s] += 1
+                    slot_left[s] -= 1
+                    stats["spec_emitted"] += 1
+                    drafter.observe(rid, int(tv))
+                    if _record_token(stats, rid, int(tv), eos, slot_left[s],
+                                     preempted=preempted_ever[rid],
+                                     t_now=t_now):
+                        # budget/EOS can land mid-window: later accepted
+                        # tokens are DROPPED, exactly where plain decode
+                        # would have stopped — parity is a prefix property
+                        free_slot(s)
+                        break
+                else:
+                    slot_last[s] = int(tok_np[s, n_acc])
+            else:
+                slot_pos[s] += 1
+                slot_left[s] -= 1
+                if _record_token(stats, rid, int(tok_np[s]), eos,
+                                 slot_left[s],
+                                 preempted=preempted_ever[rid], t_now=t_now):
+                    free_slot(s)
         if dirty[0]:
             active_dev = jnp.asarray(active)
             dirty[0] = False
@@ -888,15 +1042,24 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                     stats["ttft"][rid] = t_first
                     stats["admit_step"][rid] = stats["decode_steps"]
                 rem = gen_lens[rid] - n_em - 1
+                if spec:
+                    # (re)seed the drafter with the FULL admission context —
+                    # prompt + already-emitted for a resumed request — then
+                    # mirror the prefill token like any committed token
+                    drafter.begin(rid, adm)
+                    drafter.observe(rid, int(tok0_np[i]))
                 if not _record_token(stats, rid, int(tok0_np[i]), eos, rem,
-                                     preempted=preempted_ever[rid]):
+                                     preempted=preempted_ever[rid],
+                                     t_now=t_first):
                     active[s] = True
                     slot_req[s] = rid
                     slot_left[s] = rem
+                    slot_last[s] = int(tok0_np[i])
                     slot_admit_seq[s] = admit_seq[0]
                     admit_seq[0] += 1
-                    if paged:
-                        slot_pos[s] = plen + n_prefix
+                    slot_pos[s] = plen + (n_prefix if paged else 0)
+                elif spec:
+                    drafter.forget(rid)
             if paged:
                 for i, (s, rid, _, _) in enumerate(group):
                     if placed[i] and not active[s]:
@@ -927,7 +1090,7 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
 
 def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                  page_size=None, deadline_ms=None, pool_pages=None,
-                 check_invariants=False, plan=None):
+                 check_invariants=False, plan=None, speculate=None):
     """Batch-at-a-time baseline: a finished sequence's slot idles until the
     whole batch drains.  The queue is still served strictly FIFO.
 
@@ -956,19 +1119,38 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
             "needs uniform prompt lengths; ragged prompts need --scheduler "
             "continuous (per-slot prefill)"
         )
-    cache_len = _cache_len(cfg, prompts, gen_lens)
+    spec = int(speculate or 0)
+    # verify-round KV headroom past the final committed position, as in the
+    # continuous scheduler
+    cache_len = _cache_len(cfg, prompts, gen_lens) + spec
     enc = cfg.encoder.n_frames if cfg.family == "audio" else 0
+    n_prefix = cfg.n_prefix if cfg.family == "vlm" else 0
     rng = np.random.default_rng(seed + 1)
 
     params = _quantize_params(tf.init_params(jax.random.PRNGKey(seed), cfg), quantize)
     prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg), donate_argnums=(2,))
-    decode_fn = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(2,))
-    decode_faulted = {
-        kind: jax.jit(steps_lib.make_serve_step(cfg, act_fault=val),
-                      donate_argnums=(2,))
-        for kind, val in (("nan", float("nan")), ("inf", float("inf")))
-        if kind in plan.events
-    }
+    if spec:
+        # speculation needs per-row positions even on the batch scheduler:
+        # rows accept ragged prefix lengths per round, so the group cache is
+        # per-slot (pos (B,)) and the decode step is the masked verify step
+        decode_fn = jax.jit(steps_lib.make_verify_step_slots(cfg, spec),
+                            donate_argnums=(2,))
+        decode_faulted = {
+            kind: jax.jit(steps_lib.make_verify_step_slots(cfg, spec,
+                                                           act_fault=val),
+                          donate_argnums=(2,))
+            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
+            if kind in plan.events
+        }
+        drafter = draft_lib.make_drafter("ngram")
+    else:
+        decode_fn = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(2,))
+        decode_faulted = {
+            kind: jax.jit(steps_lib.make_serve_step(cfg, act_fault=val),
+                          donate_argnums=(2,))
+            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
+            if kind in plan.events
+        }
 
     paged = page_size is not None
     if paged:
@@ -984,14 +1166,21 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         stats.update({"kv_page_size": page_size, "pages_live": 0,
                       "pages_shared": 0, "paged_capacity_multiplier": 0.0,
                       "cow_copies": 0})
+    if spec:
+        stats.update({"speculate": spec, "spec_slot_steps": 0,
+                      "spec_emitted": 0, "spec_drafts_proposed": 0,
+                      "spec_drafts_accepted": 0,
+                      "spec_accept_hist": [0] * (spec + 1)})
 
     def group_cache(nact):
         """Fresh cache for one group: the nact live rows get page runs
         covering prompt + first decode write; padding (and later, finished)
         rows route every access to the trash page."""
         if not paged:
-            return tf.init_cache(cfg, batch, cache_len, enc_frames=enc), None, None
+            return (tf.init_cache(cfg, batch, cache_len, enc_frames=enc,
+                                  per_slot=spec > 0), None, None)
         cache = tf.init_cache(cfg, batch, cache_len, enc_frames=enc,
+                              per_slot=spec > 0,
                               page_size=page_size, num_pages=num_pages)
         galloc = paging.PageAllocator(num_pages, page_size)
         row_pages = [galloc.alloc(need_admit) if i < nact else []
@@ -1012,9 +1201,16 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     # small for a full group — or for any group at all — must reject at
     # admission time, not blow up allocating a throwaway warmup cache
     warm_tok, warm_cache = prefill_fn(params, warm_in, group_cache(0)[0])
-    warm_tok, warm_cache = decode_fn(params, warm_tok, warm_cache)
-    jax.block_until_ready(warm_tok)
-    del warm_cache, warm_tok
+    if spec:
+        warm_p, warm_a, warm_cache = decode_fn(
+            params, jnp.zeros((batch, spec + 1), jnp.int32), warm_cache,
+            jnp.zeros(batch, bool))
+        jax.block_until_ready(warm_p)
+        del warm_cache, warm_tok, warm_p, warm_a
+    else:
+        warm_tok, warm_cache = decode_fn(params, warm_tok, warm_cache)
+        jax.block_until_ready(warm_tok)
+        del warm_cache, warm_tok
 
     occ = []
     t0 = time.time()
@@ -1048,6 +1244,11 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         done = np.zeros(batch, bool)
         done[nact:] = True
         left = np.zeros(batch, np.int64)
+        # per-row next write position + last committed token: lockstep for
+        # plain decode (every live row advances 1/round), ragged under
+        # speculation (each row advances by its own accepted count)
+        row_pos = np.full(batch, prompt_len + n_prefix, np.int64)
+        row_last = np.zeros(batch, np.int64)
 
         def release_row(i):
             nonlocal cache
@@ -1063,6 +1264,7 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
             preempted_ever[rid] = True
             stats["tokens"] -= len(stats["outputs"][rid])
             stats["outputs"][rid] = []
+            stats["token_times"][rid] = []
             done[i] = True
             if paged:
                 release_row(i)
@@ -1075,12 +1277,18 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                 stats["ttft"][rid] = t_first
                 stats["admit_step"][rid] = stats["decode_steps"]
             left[i] = gen_lens[rid] - 1
+            row_last[i] = int(tok_np[i])
+            if spec:
+                # full recompute on preemption means the context is always
+                # just the original prompt + this group's emissions
+                drafter.begin(rid, group[i][1])
+                drafter.observe(rid, int(tok_np[i]))
             done[i] = _record_token(stats, rid, int(tok_np[i]), eos, left[i],
-                                    preempted=preempted_ever[rid])
+                                    preempted=preempted_ever[rid],
+                                    t_now=t_first)
             if done[i] and paged:
                 release_row(i)
         last_decode = None  # batch boundary: nobody is live across it
-        steps_in_group = 0
         while not done.all():
             step_idx = stats["decode_steps"]
             for i, (rid, _) in enumerate(group):
@@ -1095,35 +1303,47 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                     preempt_row(live[-1])
             if paged:
                 # grow every live row's run to cover this round's write
-                widx = (prompt_len + steps_in_group) // page_size
+                # window: position row_pos[i] (plain decode) through
+                # row_pos[i]+spec (all k+1 verify candidates)
                 for i in range(nact):
-                    if done[i] or widx < len(row_pages[i]):
-                        continue
-                    if plan.take("exhaust"):
-                        preempt_row([j for j in range(nact) if not done[j]][-1])
+                    last_idx = (int(row_pos[i]) + spec) // page_size
+                    while not done[i] and len(row_pages[i]) <= last_idx:
+                        widx = len(row_pages[i])
+                        if plan.take("exhaust"):
+                            preempt_row([j for j in range(nact)
+                                         if not done[j]][-1])
+                            if done[i]:
+                                break
+                        while not galloc.free_pages() and not done[i]:
+                            live = [j for j in range(nact) if not done[j]]
+                            if live == [i]:
+                                # i already owns every pool page and still
+                                # needs more: a full recompute can never
+                                # help — this sequence simply does not fit
+                                # the pool.  Terminal rejection, never a
+                                # requeue livelock.
+                                rid = group[i][0]
+                                stats["tokens"] -= len(stats["outputs"][rid])
+                                stats["outputs"][rid] = []
+                                stats["token_times"][rid] = []
+                                stats["status"][rid] = "rejected"
+                                stats["rejections"] += 1
+                                done[i] = True
+                                release_row(i)
+                                break
+                            preempt_row(live[-1])
                         if done[i]:
-                            continue
-                    while not galloc.free_pages() and not done[i]:
-                        live = [j for j in range(nact) if not done[j]]
-                        if live == [i]:
-                            # i already owns every pool page and still needs
-                            # more: a full recompute can never help — this
-                            # sequence simply does not fit the pool.
-                            # Terminal rejection, never a requeue livelock.
-                            rid = group[i][0]
-                            stats["tokens"] -= len(stats["outputs"][rid])
-                            stats["outputs"][rid] = []
-                            stats["status"][rid] = "rejected"
-                            stats["rejections"] += 1
-                            done[i] = True
-                            release_row(i)
                             break
-                        preempt_row(live[-1])
-                    if done[i]:
-                        continue
-                    newp = galloc.alloc(1)[0]
-                    row_pages[i].append(newp)
-                    cache["page_table"] = cache["page_table"].at[i, widx].set(newp)
+                        newp = galloc.alloc(1)[0]
+                        row_pages[i].append(newp)
+                        cache["page_table"] = cache["page_table"].at[i, widx].set(newp)
+                if spec:
+                    # no prefix sharing on this scheduler, so every page is
+                    # exclusive by construction — the check keeps the
+                    # invariant honest anyway (refcounts are per-allocator)
+                    faults_lib.check_write_window(
+                        galloc, [not d for d in done], row_pages, row_pos,
+                        page_size, spec)
             if done.all():
                 break
             if plan.at_step("qscale", step_idx) and "k_scale" in cache:
@@ -1137,21 +1357,55 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                 if plan.at_step(kind, step_idx):
                     fn = decode_faulted[kind]
             occ.append((~done).sum() / batch)
-            tok, cache = fn(params, tok, cache)
+            if spec:
+                win = np.zeros((batch, spec + 1), np.int32)
+                for i, (rid, _) in enumerate(group):
+                    if not done[i]:
+                        win[i, 0] = row_last[i]
+                        win[i, 1:] = drafter.propose(rid, spec)
+                preds, acc, cache = fn(params, jnp.asarray(win), cache,
+                                       jnp.asarray(~done))
+                tok_blk = np.asarray(preds)
+                acc_np = np.asarray(acc)
+            else:
+                tok, cache = fn(params, tok, cache)
+                tok_np = np.asarray(tok)[:, 0]
             stats["decode_steps"] += 1
-            steps_in_group += 1
             now = time.time()
             if last_decode is not None:
                 stats["max_stall_ms"] = max(stats["max_stall_ms"],
                                             (now - last_decode) * 1e3)
             last_decode = now
-            tok_np = np.asarray(tok)[:, 0]
+            t_now = now - t0
             for i, (rid, _) in enumerate(group):
                 if done[i]:
                     continue
-                left[i] -= 1
-                done[i] = _record_token(stats, rid, int(tok_np[i]), eos, left[i],
-                                        preempted=preempted_ever[rid])
+                if spec:
+                    n_acc = int(acc_np[i])
+                    stats["spec_slot_steps"] += 1
+                    stats["spec_drafts_proposed"] += spec
+                    stats["spec_drafts_accepted"] += n_acc
+                    stats["spec_accept_hist"][n_acc] += 1
+                    for tv in tok_blk[i, :n_acc + 1]:
+                        row_pos[i] += 1
+                        left[i] -= 1
+                        stats["spec_emitted"] += 1
+                        drafter.observe(rid, int(tv))
+                        done[i] = _record_token(stats, rid, int(tv), eos,
+                                                left[i],
+                                                preempted=preempted_ever[rid],
+                                                t_now=t_now)
+                        if done[i]:
+                            break
+                    if not done[i]:
+                        row_last[i] = int(tok_blk[i, n_acc])
+                else:
+                    row_pos[i] += 1
+                    left[i] -= 1
+                    done[i] = _record_token(stats, rid, int(tok_np[i]), eos,
+                                            left[i],
+                                            preempted=preempted_ever[rid],
+                                            t_now=t_now)
                 if done[i] and paged:
                     release_row(i)
             if paged:
@@ -1213,6 +1467,13 @@ def main():
                          "at the watermark and page-growth failures preempt "
                          "the newest slot, whose request is recomputed "
                          "bit-identically")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="greedy speculative decoding: verify this many "
+                         "self-drafted tokens (n-gram prompt-lookup, no "
+                         "second model) per slot per step in one (B, k+1) "
+                         "window — projections become skinny GEMMs sharing "
+                         "one weight stream.  Emitted tokens are "
+                         "bit-identical to --speculate 0 (0 = off)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request wall-clock deadline, enforced at "
                          "decode-round boundaries (status 'timeout'; "
@@ -1234,7 +1495,8 @@ def main():
           pool_pages=args.pool_pages or None,
           deadline_ms=args.deadline_ms,
           check_invariants=args.check_invariants,
-          faults=args.faults or None)
+          faults=args.faults or None,
+          speculate=args.speculate or None)
 
 
 if __name__ == "__main__":

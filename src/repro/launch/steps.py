@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import blas
 from repro.models import transformer as tf
 from repro.optim import adamw
 
@@ -105,6 +106,60 @@ def make_decode_step_slots(cfg: ModelConfig, act_fault=None):
         return next_tok, cache
 
     return decode_step_slots
+
+
+def make_verify_step_slots(cfg: ModelConfig, k: int, act_fault=None):
+    """Speculative verify over the ragged slot grid: score k draft tokens
+    per slot in one forward pass and accept the longest greedy prefix.
+
+    (params, tokens (B, k+1), cache{pos: (B,)}, active (B,) bool)
+        -> (preds (B, k+1), acc (B,), cache)
+
+    tokens[:, 0] is each slot's last COMMITTED token (what plain decode
+    would feed), tokens[:, 1:] the k drafts.  The whole window runs through
+    `tf.verify_step` — projections as (B, k+1, d) skinny GEMMs amortizing
+    one weight stream over k+1 tokens, attention through the one flash
+    kernel with per-row kv_lens = pos + k + 1, KV for all k+1 candidates
+    written quantized/paged as usual.
+
+    preds[:, j] = argmax logits at window position j: what greedy decode
+    emits after seeing tokens[:, :j+1].  Draft j is correct iff it equals
+    the model's own prediction at the previous position, so the accepted
+    count is the longest matching prefix:
+
+        acc = sum_j prod_{i<=j} [preds[:, i] == tokens[:, i+1]]   in [0, k]
+
+    and the slot emits acc+1 tokens this round: preds[:, :acc+1].
+    preds[:, 0] never depends on the drafts (causal attention), so with
+    acc == 0 this is EXACTLY the plain decode step — greedy token parity
+    with --speculate 0 holds by construction, per token id, regardless of
+    drafter quality.
+
+    Rollback is a pos rewind, not a cache wipe: pos advances by acc+1 only,
+    so the k-acc rejected writes become the masked-dead tail past kv_lens
+    that PR 5/6 pinned as the cache invariant (the next verify round
+    overwrites them).  Inactive slots freeze exactly like the plain step.
+    Jit with donate_argnums=(2,); act_fault as in `make_serve_step`.
+    """
+    if k < 1:
+        raise ValueError(f"speculation needs k >= 1 drafts, got {k}")
+
+    def verify_step_slots(params, tokens, cache, active):
+        pos0 = cache["pos"]
+        # Trace under the verify-window flag: the quantized xla path must
+        # score every window row with the SAME packed per-row matvec the
+        # t=1 decode step uses — a dequantize+GEMM fallback rounds
+        # differently and flips near-tied argmaxes, breaking token parity.
+        with blas.verify_window():
+            logits, cache = tf.verify_step(params, tokens, cache, cfg,
+                                           act_fault=act_fault)
+        preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, k+1)
+        match = (preds[:, :-1] == tokens[:, 1:]).astype(jnp.int32)
+        acc = jnp.cumprod(match, axis=1).sum(axis=1)            # (B,)
+        cache = {**cache, "pos": jnp.where(active, pos0 + acc + 1, pos0)}
+        return preds, acc, cache
+
+    return verify_step_slots
 
 
 def make_eval_step(cfg: ModelConfig):

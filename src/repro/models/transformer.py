@@ -688,3 +688,21 @@ def decode_step(params, token, cache, cfg: ModelConfig, act_fault=None):
                           act_fault=act_fault)
     logits = _logits_chunk(params, x, cfg)[:, 0]
     return logits, cache
+
+
+def verify_step(params, tokens, cache, cfg: ModelConfig, act_fault=None):
+    """Speculative verify: run a (B, T) window of already-chosen tokens
+    through the model in ONE forward pass and return logits at EVERY
+    position, (B, T, V).  Structurally this is `decode_step` at T > 1 —
+    same cache write path (per-slot positions, quantized/paged as
+    configured), but the projections see (B, T, d) activations and route
+    through the batched GEMM kernels instead of per-token GEMVs: one weight
+    stream amortized over T tokens, the Level-2 -> Level-3 intensity shift
+    speculative decoding exists for.  KV for all T candidates is written;
+    the scheduler rewinds `pos` past rejected suffixes, leaving them as the
+    masked-dead cache tail the per-row kv_lens invariant already tolerates.
+    """
+    x, _, cache = forward(params, {"tokens": tokens}, cfg, cache=cache,
+                          act_fault=act_fault)
+    logits = _logits_chunk(params, x, cfg)
+    return logits, cache

@@ -42,9 +42,43 @@ def test_strassen_winograd_op_counts():
 @given(m=st.integers(1, 16384), n=st.integers(1, 16384), k=st.integers(1, 16384))
 def test_block_chooser_respects_vmem_and_alignment(m, n, k):
     b = choose_block_shape(m, n, k)
-    assert b.bm % 128 == 0 and b.bn % 128 == 0 and b.bk % 128 == 0
+    # bm is MXU-aligned — except the skinny-m plan, where the one legal
+    # sub-MXU extent is the SUBLANE-aligned real row count
+    assert (b.bm % 128 == 0
+            or b.bm == tiling.round_up(m, tiling.SUBLANE))
+    assert b.bm % tiling.SUBLANE == 0
+    assert b.bn % 128 == 0 and b.bk % 128 == 0
     vmem = 2 * (b.bm * b.bk + b.bk * b.bn) * 2 + b.bm * b.bn * 4 + b.bm * b.bn * 2
     assert vmem <= tiling.DEFAULT_VMEM_BUDGET
+
+
+def test_skinny_m_plans_sublane_block():
+    """Speculative verify windows run (k+1)-row member GEMMs (k+1 <= 8):
+    the planner must pick the SUBLANE-aligned bm — a 128-row tile would be
+    >90% padding — and spend the freed VMEM on wide bn/bk, where the
+    arithmetic intensity actually lives when m is tiny."""
+    for m in (1, 4, 5, 8):
+        top = tiling.rank_block_shapes(m, 4096, 4096)[0]
+        assert top.bm == 8, (m, top)
+        assert top.bn >= 1024 and top.bk >= 1024, (m, top)
+    # one row past the sublane: pads to 16, still beats a 128-row tile
+    assert tiling.rank_block_shapes(9, 4096, 4096)[0].bm == 16
+    # at or past one MXU tile nothing changes
+    assert tiling.rank_block_shapes(128, 4096, 4096)[0].bm % 128 == 0
+    assert choose_block_shape(8192, 8192, 8192).bm % 128 == 0
+
+
+def test_autotune_cache_key_quantized_is_distinct():
+    """A winner measured with packed int8 B tiles must never be served to
+    the full-precision op: the :q1 suffix keys quantized plans separately,
+    composing with the fused-epilogue flags."""
+    base = dict(op="bgemm", m=8, n=4096, k=4096, dtype_bytes=2,
+                backend="cpu")
+    plain = tiling.autotune_cache_key(**base)
+    quant = tiling.autotune_cache_key(**base, quantized=True)
+    fused_q = tiling.autotune_cache_key(**base, gate=True, quantized=True)
+    assert plain != quant and quant.endswith(":q1")
+    assert len({plain, quant, fused_q}) == 3
 
 
 def test_vmem_bytes_matches_selection_budget_formula():
