@@ -55,7 +55,15 @@ JSON schema (schema_version 1):
                                                 # emitted bit-identical
                                                 # greedy tokens on both
                                                 # schedulers
-                  "spec_acceptance_rate": float}  # accepted/proposed drafts
+                  "spec_acceptance_rate": float,  # accepted/proposed drafts
+                  "tp_token_parity": float,     # 1.0 iff --tp 2 emitted
+                                                # bit-identical greedy tokens
+                                                # to the 1-device run on the
+                                                # fully-composed cell
+                  "tp_interconnect_byte_ratio": float}  # modeled wire-byte
+                                                # reduction of packed int8
+                                                # shards vs f32 in the
+                                                # weight-moving collectives
     }
 """
 
@@ -103,6 +111,7 @@ def _summarize(rows: list[dict]) -> dict:
     paged = {}
     robust = {}
     spec = {}
+    tp = {}
     for row in rows:
         m = row["metrics"]
         if row["name"].startswith("serve_speculative_k"):
@@ -114,6 +123,13 @@ def _summarize(rows: list[dict]) -> dict:
                                       "spec_token_parity",
                                       "spec_acceptance_rate")
                     if isinstance(m.get(k), float)}
+        if row["name"] == "serve_tp2":
+            # tensor-parallel packed-weight serving (ISSUE 10): the bench
+            # asserts token identity vs the 1-device run itself; the wire
+            # ratio is the modeled int8-shard interconnect win CI gates
+            tp = {k: m[k] for k in ("tp_token_parity",
+                                    "tp_interconnect_byte_ratio")
+                  if isinstance(m.get(k), float)}
         if row["name"] == "serve_preempt_recompute":
             # preemption + exact recompute under injected exhaustion
             # (ISSUE 8): the bench asserts parity itself and emits 1.0 flags
@@ -194,6 +210,10 @@ def _summarize(rows: list[dict]) -> dict:
         "spec_tokens_per_step": spec.get("spec_tokens_per_step", 0.0),
         "spec_token_parity": spec.get("spec_token_parity", 0.0),
         "spec_acceptance_rate": spec.get("spec_acceptance_rate", 0.0),
+        # tensor-parallel serving (ISSUE 10): greedy-token identity of the
+        # --tp 2 mesh run and the modeled packed-shard wire-byte reduction
+        "tp_token_parity": tp.get("tp_token_parity", 0.0),
+        "tp_interconnect_byte_ratio": tp.get("tp_interconnect_byte_ratio", 0.0),
     }
 
 

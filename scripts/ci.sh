@@ -104,6 +104,26 @@ print(f"[fault-smoke] small pool: {real['preemptions']} preemptions, "
       f"{real['completed']} completed, statuses {real['status']}")
 PY
 
+# Forced-device mesh job (ISSUE 10): the collective-GEMM conformance matrix
+# and the TP serving invariants run on an EMULATED 4-device host mesh (jax
+# locks the device count at first init, so the flag must be set before any
+# other jax-importing step touches the interpreter — each test re-forces it
+# in a subprocess, and this job pins the harness itself under the flag).
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q tests/test_mesh_conformance.py
+
+# Tensor-parallel serve smoke: --tp 2 on a forced 2-device mesh, composed
+# with every byte-path lever (int8 weights, int8 KV, paged pool, speculate)
+# — packed int8 shards resident per device, one integer psum per layer
+# boundary, KV heads + page pools sharded.  Greedy-token identity vs the
+# 1-device run is gated below on the bench's asserted tp_token_parity.
+XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.launch.serve \
+  --variant smoke --requests 6 --batch 2 --prompt-len 8 --gen 4 \
+  --scheduler continuous --tp 2 --speculate 4 \
+  --quantize int8 --kv-cache int8 --kv-page-size 4
+
 # Fused-MLP + quantized-streaming smoke + perf-trajectory JSON: the
 # kernel/fused-epilogue/quantized benches run end-to-end and emit
 # BENCH_kernels.json (GFLOP/s, GB/s + %-of-measured-bandwidth for the
@@ -133,7 +153,8 @@ assert {"max_gflops", "pct_roofline", "fused_speedup", "min_fused_speedup",
         "paged_pages_live", "paged_pages_shared",
         "preempt_recompute_parity", "fault_smoke_pass",
         "spec_tokens_per_step", "spec_token_parity",
-        "spec_acceptance_rate"} <= set(s), s
+        "spec_acceptance_rate", "tp_token_parity",
+        "tp_interconnect_byte_ratio"} <= set(s), s
 assert s["max_gflops"] > 0 and 0 < s["pct_roofline"] <= 1, s
 # the fused epilogue must win structurally (fewer launches + HBM round
 # trips on every fused row) AND show no real wall-clock regression: the
@@ -184,6 +205,13 @@ assert s["fault_smoke_pass"] == 1.0, s
 assert s["spec_tokens_per_step"] > 1.2, s
 assert s["spec_token_parity"] == 1.0, s
 assert s["spec_acceptance_rate"] > 0, s
+# tensor-parallel serving (ISSUE 10): the bench runs the fully-composed
+# --tp 2 cell on a forced 2-device mesh and asserts greedy-token identity
+# with the 1-device run (integer psum is exact, so this is bitwise);
+# the interconnect ratio is the modeled wire-byte win of circulating
+# packed int8 shards instead of f32 in the weight-moving collectives
+assert s["tp_token_parity"] == 1.0, s
+assert s["tp_interconnect_byte_ratio"] >= 2.0, s
 # bandwidth-bound rows must carry the GB/s roofline column
 names = {r["name"] for r in d["rows"]}
 for prefix in ("blas_gemv_", "blas_bgemv_", "blas_ddot_"):

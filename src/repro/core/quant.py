@@ -490,3 +490,71 @@ def gemv_host(qt: QuantizedTensor, x: jnp.ndarray) -> jnp.ndarray:
 def activation_scale(x: jnp.ndarray) -> jnp.ndarray:
     """The per-call activation scale `gemv_host` uses (for error bounds)."""
     return jnp.max(jnp.abs(x.astype(jnp.float32))) / INT8_MAX
+
+
+# --------------------------------------------------------------------------
+# Lockstep sharding (ISSUE 10 — tensor-parallel packed weights)
+# --------------------------------------------------------------------------
+
+def align_blocks_for_sharding(qt: QuantizedTensor, shards: int,
+                              dim: int = 0) -> QuantizedTensor:
+    """Subdivide the scale grid so an even `shards`-way split of stored
+    dimension `dim` never cuts through a quant block.
+
+    The new block extent is gcd(block, local_extent): every old block is an
+    integer number of new blocks, so the move is pure metadata — scales are
+    repeated (old // new)x along the axis and `dequantize()` is bitwise
+    unchanged.  After alignment, values and scales shard in lockstep under
+    the SAME PartitionSpec and every local shard is a self-consistent
+    QuantizedTensor.
+    """
+    if dim not in (0, 1):
+        raise ValueError(f"dim must be 0 or 1, got {dim}")
+    if shards <= 1:
+        return qt
+    ax = dim - 2  # stored trailing axes: (..., m, n)
+    size = qt.values.shape[ax]
+    if size % shards:
+        raise ValueError(
+            f"stored dim {dim} of size {size} not divisible by {shards}")
+    import math as _math
+    old = qt.block[dim]
+    new = _math.gcd(old, size // shards)
+    if new == old:
+        return qt
+    scales = jnp.repeat(qt.scales, old // new, axis=ax)
+    block = (new, qt.block[1]) if dim == 0 else (qt.block[0], new)
+    return QuantizedTensor(values=qt.values, scales=scales, block=block,
+                           transposed=qt.transposed)
+
+
+def shard_quantized(qt: QuantizedTensor, shards: int, dim: int = 0) -> list:
+    """Split a QuantizedTensor into `shards` equal QuantizedTensors along
+    stored dimension `dim`, values and scale grid in lockstep."""
+    qt = align_blocks_for_sharding(qt, shards, dim=dim)
+    ax = dim - 2
+    vals = jnp.split(qt.values, shards, axis=ax)
+    scls = jnp.split(qt.scales, shards, axis=ax)
+    return [
+        QuantizedTensor(values=v, scales=s, block=qt.block,
+                        transposed=qt.transposed)
+        for v, s in zip(vals, scls)
+    ]
+
+
+def unshard_quantized(parts: list, dim: int = 0) -> QuantizedTensor:
+    """Reassemble `shard_quantized` output: bitwise inverse (same values,
+    same scale grid, same block metadata)."""
+    if not parts:
+        raise ValueError("unshard_quantized needs at least one shard")
+    first = parts[0]
+    for p in parts[1:]:
+        if p.block != first.block or p.transposed != first.transposed:
+            raise ValueError("shards disagree on block/transposed metadata")
+    ax = dim - 2
+    return QuantizedTensor(
+        values=jnp.concatenate([p.values for p in parts], axis=ax),
+        scales=jnp.concatenate([p.scales for p in parts], axis=ax),
+        block=first.block,
+        transposed=first.transposed,
+    )

@@ -286,6 +286,19 @@ def decode_byte_terms(cfg, cell, chips: int = 1, kv_page_size: int = 0,
             + n_occ * cell.global_batch * cell.seq_len * 2 * kv * hd * dt
         ) / chips
     act = layers * cell.global_batch * unit * dt / chips
+    # TP serving interconnect (chips > 1): two row-parallel psums per layer
+    # (attention out + MLP down), each reducing a (B, d_model) f32 partial
+    # over the ring — 2(g-1)/g wire bytes per element for a g-chip
+    # all-reduce.  Every weight/KV term above is already per-chip (/chips):
+    # this is the term that BUYS that division.  It scales with d_model and
+    # batch only — weight precision does not appear, which is exactly the
+    # int8-shard co-design win (`tp_interconnect_byte_ratio`): packing the
+    # resident shards shrinks per-chip HBM bytes ~4x while the boundary
+    # reduction stays the same f32 wire payload.
+    interconnect = 0.0
+    if chips > 1:
+        ring = 2.0 * (chips - 1) / chips
+        interconnect = 2 * L * ring * cell.global_batch * d * 4.0
     if draft_k:
         if not 0.0 <= accept_rate <= 1.0:
             raise ValueError(f"accept_rate must be in [0, 1], got {accept_rate}")
@@ -294,8 +307,22 @@ def decode_byte_terms(cfg, cell, chips: int = 1, kv_page_size: int = 0,
         cache /= tps
         page_table /= tps
         act *= (draft_k + 1) / tps
+        # the boundary reduction carries every window row, accepted or not:
+        # it scales like activations, not like the amortized weight stream
+        interconnect *= (draft_k + 1) / tps
     return {"weights": weights, "kv": cache, "page_table": page_table,
-            "act": act, "total": weights + cache + page_table + act}
+            "act": act, "interconnect": interconnect,
+            "total": weights + cache + page_table + act + interconnect}
+
+
+def tp_interconnect_byte_ratio() -> float:
+    """Wire-byte reduction of circulating PACKED weight shards vs f32 in the
+    weight-moving collective schedules (distributed.all_gather_gemm /
+    ring_gemm / block_parallel_gemm stream int8 values + block scales where
+    the naive decomposition streams f32): 4 / WEIGHT_INT8_BYTES ≈ 3.76x.
+    The KBLAS argument at the network level — the operand layout co-designed
+    for HBM is the same layout the interconnect wants."""
+    return 4.0 / WEIGHT_INT8_BYTES
 
 
 @dataclasses.dataclass

@@ -45,6 +45,7 @@ from repro.core import blas
 from repro.launch import draft as draft_lib
 from repro.launch import faults as faults_lib
 from repro.launch import paging
+from repro.launch import sharding as sharding_lib
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tf
 from repro.models.registry import get_config
@@ -61,7 +62,7 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
           kv_page_size: Optional[int] = None, prefix_reuse: bool = True,
           deadline_ms=None, pool_pages: Optional[int] = None,
           check_invariants: bool = False, faults=None,
-          speculate: Optional[int] = None):
+          speculate: Optional[int] = None, tp: int = 1):
     """Serve `requests` synthetic prompts through greedy decode.
 
     quantize="int8" packs every projection weight with block-scaled int8
@@ -237,6 +238,27 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
                        else [None if d is None else float(d) for d in deadline_ms])
         if len(deadline_ms) != n:
             raise ValueError(f"{len(deadline_ms)} deadline_ms for {n} requests")
+    tp = int(tp)
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if tp > 1:
+        if backend != "xla":
+            raise ValueError("tensor-parallel serving shards the packed host "
+                             "matvec path and needs --backend xla")
+        if cfg.family != "dense":
+            raise ValueError(
+                f"--tp shards attention heads and FFN features of the dense "
+                f"family; {cfg.family!r} is not wired for the model axis")
+        for field, val in (("n_heads", cfg.n_heads), ("n_kv", cfg.n_kv),
+                           ("d_ff", cfg.d_ff)):
+            if val % tp:
+                raise ValueError(f"--tp {tp} must divide {field}={val}")
+        if len(jax.devices()) < tp:
+            raise ValueError(
+                f"--tp {tp} needs {tp} devices but only "
+                f"{len(jax.devices())} are visible; emulate host devices "
+                f"with XLA_FLAGS=--xla_force_host_platform_device_count={tp} "
+                f"(must be set before jax initializes)")
     with blas.use_backend(backend):
         if scheduler == "continuous":
             if cfg.family not in tf.SLOT_CACHE_FAMILIES:
@@ -252,16 +274,17 @@ def serve(arch: str, variant: str = "smoke", requests: Optional[int] = None, bat
                                       deadline_ms=deadline_ms,
                                       pool_pages=pool_pages,
                                       check_invariants=check_invariants,
-                                      plan=plan, speculate=speculate)
+                                      plan=plan, speculate=speculate, tp=tp)
         elif scheduler == "batch":
             stats = _serve_batch(cfg, prompts, list(gen_lens), batch, seed, eos,
                                  quantize, page_size=kv_page_size,
                                  deadline_ms=deadline_ms,
                                  pool_pages=pool_pages,
                                  check_invariants=check_invariants,
-                                 plan=plan, speculate=speculate)
+                                 plan=plan, speculate=speculate, tp=tp)
         else:
             raise ValueError(f"scheduler must be 'continuous' or 'batch', got {scheduler!r}")
+    stats["tp"] = tp
     if verbose:
         paged_info = ""
         if "pages_live" in stats:
@@ -411,10 +434,28 @@ def _quantize_params(params, quantize: str):
     return params
 
 
+def _make_tp_context(cfg, params, tp: int):
+    """Shard the serve params for `--tp N`: 1-D ("model",) mesh, Megatron
+    column/row layout (launch.sharding.tp_param_specs), packed weights
+    block-aligned first so int8 values and scale grids split in lockstep.
+    Weights are device_put ONCE here — every per-step jit then consumes
+    them already resident at the shard_map's required sharding (no per-call
+    resharding).  Returns None at tp=1 so the single-device path is
+    untouched."""
+    if tp <= 1:
+        return None
+    mesh = steps_lib.tp_mesh(tp)
+    params = sharding_lib.tp_align_params(params, tp)
+    pspecs = sharding_lib.tp_param_specs(params, cfg, mesh)
+    params = jax.device_put(params, sharding_lib.to_shardings(pspecs, mesh))
+    return {"mesh": mesh, "pspecs": pspecs, "params": params}
+
+
 def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                       prefill_chunk=None, page_size=None, prefix_reuse=True,
                       deadline_ms=None, pool_pages=None,
-                      check_invariants=False, plan=None, speculate=None):
+                      check_invariants=False, plan=None, speculate=None,
+                      tp=1):
     """Slot-level admission: finished sequences free their slot immediately;
     each free slot prefills the next FIFO request into the shared cache.
 
@@ -461,30 +502,9 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     rng = np.random.default_rng(seed + 1)
 
     params = _quantize_params(tf.init_params(jax.random.PRNGKey(seed), cfg), quantize)
-    # the admission prefill's zero template is reused every round: no donation
-    prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg))
-    if spec:
-        # speculative: the decode step IS the verify step — one (B, k+1)
-        # window launch per round; the plain step is never traced
-        decode_fn = jax.jit(steps_lib.make_verify_step_slots(cfg, spec),
-                            donate_argnums=(2,))
-        decode_faulted = {
-            kind: jax.jit(steps_lib.make_verify_step_slots(cfg, spec,
-                                                           act_fault=val),
-                          donate_argnums=(2,))
-            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
-            if kind in plan.events
-        }
-        drafter = draft_lib.make_drafter("ngram")
-    else:
-        decode_fn = jax.jit(steps_lib.make_decode_step_slots(cfg), donate_argnums=(2,))
-        # poisoned step variants, traced only when a NaN/Inf fault is scheduled
-        decode_faulted = {
-            kind: jax.jit(steps_lib.make_decode_step_slots(cfg, act_fault=val),
-                          donate_argnums=(2,))
-            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
-            if kind in plan.events
-        }
+    tp_ctx = _make_tp_context(cfg, params, tp)
+    if tp_ctx is not None:
+        params = tp_ctx["params"]
     mini_zero = tf.init_cache(cfg, batch, cache_len)
 
     paged = page_size is not None
@@ -506,6 +526,72 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     else:
         admit_fn = jax.jit(_admit_step, donate_argnums=(0, 3))
 
+    # step builders (after the paged-pool sizing: the TP cache specs come
+    # from a REAL slot-cache template, page pool included)
+    if tp_ctx is None:
+        def mk_prefill():
+            return steps_lib.make_prefill_step(cfg)
+
+        def mk_decode(act_fault=None):
+            return steps_lib.make_decode_step_slots(cfg, act_fault=act_fault)
+
+        def mk_verify(act_fault=None):
+            return steps_lib.make_verify_step_slots(cfg, spec,
+                                                    act_fault=act_fault)
+
+        def put_slot(c):
+            return c
+    else:
+        mesh, pspecs = tp_ctx["mesh"], tp_ctx["pspecs"]
+        mini_specs = sharding_lib.tp_cache_specs(mini_zero)
+        slot_kwargs = dict(per_slot=True)
+        if paged:
+            slot_kwargs.update(page_size=page_size, num_pages=num_pages)
+        slot_specs = sharding_lib.tp_cache_specs(
+            tf.init_cache(cfg, batch, cache_len, **slot_kwargs))
+        slot_shardings = sharding_lib.to_shardings(slot_specs, mesh)
+
+        def mk_prefill():
+            return steps_lib.make_tp_prefill_step(cfg, mesh, pspecs,
+                                                  mini_specs)
+
+        def mk_decode(act_fault=None):
+            return steps_lib.make_tp_decode_step_slots(
+                cfg, mesh, pspecs, slot_specs, act_fault=act_fault)
+
+        def mk_verify(act_fault=None):
+            return steps_lib.make_tp_verify_step_slots(
+                cfg, mesh, spec, pspecs, slot_specs, act_fault=act_fault)
+
+        def put_slot(c):
+            # place a freshly-built slot cache at the shard_map's required
+            # sharding once, so the donated buffers never reshard per step
+            return jax.device_put(c, slot_shardings)
+
+        mini_zero = jax.device_put(
+            mini_zero, sharding_lib.to_shardings(mini_specs, mesh))
+
+    # the admission prefill's zero template is reused every round: no donation
+    prefill_fn = jax.jit(mk_prefill())
+    if spec:
+        # speculative: the decode step IS the verify step — one (B, k+1)
+        # window launch per round; the plain step is never traced
+        decode_fn = jax.jit(mk_verify(), donate_argnums=(2,))
+        decode_faulted = {
+            kind: jax.jit(mk_verify(act_fault=val), donate_argnums=(2,))
+            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
+            if kind in plan.events
+        }
+        drafter = draft_lib.make_drafter("ngram")
+    else:
+        decode_fn = jax.jit(mk_decode(), donate_argnums=(2,))
+        # poisoned step variants, traced only when a NaN/Inf fault is scheduled
+        decode_faulted = {
+            kind: jax.jit(mk_decode(act_fault=val), donate_argnums=(2,))
+            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
+            if kind in plan.events
+        }
+
     # compile outside the timed region (throwaway buffers), so the stats
     # measure scheduling, not jit.  Ragged prompts still trace one extra
     # prefill per distinct length inside the loop.
@@ -513,8 +599,10 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     warm_in.update(_prefill_extras(cfg, rng, batch, 0))
     warm_tok0, warm_mini = prefill_fn(params, warm_in, mini_zero)
     if paged:
-        warm_cache = tf.init_cache(cfg, batch, cache_len, per_slot=True,
-                                   page_size=page_size, num_pages=num_pages)
+        warm_cache = put_slot(tf.init_cache(cfg, batch, cache_len,
+                                            per_slot=True,
+                                            page_size=page_size,
+                                            num_pages=num_pages))
         zc = jnp.zeros((batch * (len(prompts[0]) + n_prefix),), jnp.int32)
         warm_cache = graft_fn(warm_cache, warm_mini, zc, zc, zc, zc)
         warm_cache = copy_fn(warm_cache, jnp.zeros((1,), jnp.int32),
@@ -522,7 +610,8 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         warm_tok = jnp.zeros((batch, 1), jnp.int32)
     else:
         warm_cache, warm_tok = admit_fn(
-            tf.init_cache(cfg, batch, cache_len, per_slot=True), warm_mini,
+            put_slot(tf.init_cache(cfg, batch, cache_len, per_slot=True)),
+            warm_mini,
             jnp.zeros(batch, jnp.int32) - 1, jnp.zeros((batch, 1), jnp.int32), warm_tok0)
     if spec:
         warm_p, warm_a, warm_cache = decode_fn(
@@ -538,11 +627,12 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
 
     pending = collections.deque(enumerate(prompts))  # FIFO: popleft serves arrival order
     if paged:
-        cache = tf.init_cache(cfg, batch, cache_len, per_slot=True,
-                              page_size=page_size, num_pages=num_pages)
+        cache = put_slot(tf.init_cache(cfg, batch, cache_len, per_slot=True,
+                                       page_size=page_size,
+                                       num_pages=num_pages))
         max_pages_row = cache["page_table"].shape[1]
     else:
-        cache = tf.init_cache(cfg, batch, cache_len, per_slot=True)
+        cache = put_slot(tf.init_cache(cfg, batch, cache_len, per_slot=True))
     # the token block and active mask live on device; the host only touches
     # rows on admission/finish events, so a steady decode step has no H2D
     # transfer (same as the batch-at-a-time loop)
@@ -1090,7 +1180,7 @@ def _serve_continuous(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
 
 def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
                  page_size=None, deadline_ms=None, pool_pages=None,
-                 check_invariants=False, plan=None, speculate=None):
+                 check_invariants=False, plan=None, speculate=None, tp=1):
     """Batch-at-a-time baseline: a finished sequence's slot idles until the
     whole batch drains.  The queue is still served strictly FIFO.
 
@@ -1128,29 +1218,9 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
     rng = np.random.default_rng(seed + 1)
 
     params = _quantize_params(tf.init_params(jax.random.PRNGKey(seed), cfg), quantize)
-    prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg), donate_argnums=(2,))
-    if spec:
-        # speculation needs per-row positions even on the batch scheduler:
-        # rows accept ragged prefix lengths per round, so the group cache is
-        # per-slot (pos (B,)) and the decode step is the masked verify step
-        decode_fn = jax.jit(steps_lib.make_verify_step_slots(cfg, spec),
-                            donate_argnums=(2,))
-        decode_faulted = {
-            kind: jax.jit(steps_lib.make_verify_step_slots(cfg, spec,
-                                                           act_fault=val),
-                          donate_argnums=(2,))
-            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
-            if kind in plan.events
-        }
-        drafter = draft_lib.make_drafter("ngram")
-    else:
-        decode_fn = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(2,))
-        decode_faulted = {
-            kind: jax.jit(steps_lib.make_serve_step(cfg, act_fault=val),
-                          donate_argnums=(2,))
-            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
-            if kind in plan.events
-        }
+    tp_ctx = _make_tp_context(cfg, params, tp)
+    if tp_ctx is not None:
+        params = tp_ctx["params"]
 
     paged = page_size is not None
     if paged:
@@ -1158,6 +1228,62 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         num_pages = pool_pages if pool_pages is not None else 1 + batch * max_pages
         # pages through the first decode write; later writes grow on demand
         need_admit = prompt_len // page_size + 1
+
+    if tp_ctx is None:
+        def mk_prefill():
+            return steps_lib.make_prefill_step(cfg)
+
+        def mk_serve(act_fault=None):
+            return steps_lib.make_serve_step(cfg, act_fault=act_fault)
+
+        def mk_verify(act_fault=None):
+            return steps_lib.make_verify_step_slots(cfg, spec,
+                                                    act_fault=act_fault)
+
+        def put_group(c):
+            return c
+    else:
+        mesh, pspecs = tp_ctx["mesh"], tp_ctx["pspecs"]
+        group_kwargs = dict(enc_frames=enc, per_slot=spec > 0)
+        if paged:
+            group_kwargs.update(page_size=page_size, num_pages=num_pages)
+        gspecs = sharding_lib.tp_cache_specs(
+            tf.init_cache(cfg, batch, cache_len, **group_kwargs))
+        group_shardings = sharding_lib.to_shardings(gspecs, mesh)
+
+        def mk_prefill():
+            return steps_lib.make_tp_prefill_step(cfg, mesh, pspecs, gspecs)
+
+        def mk_serve(act_fault=None):
+            return steps_lib.make_tp_serve_step(cfg, mesh, pspecs, gspecs,
+                                                act_fault=act_fault)
+
+        def mk_verify(act_fault=None):
+            return steps_lib.make_tp_verify_step_slots(
+                cfg, mesh, spec, pspecs, gspecs, act_fault=act_fault)
+
+        def put_group(c):
+            return jax.device_put(c, group_shardings)
+
+    prefill_fn = jax.jit(mk_prefill(), donate_argnums=(2,))
+    if spec:
+        # speculation needs per-row positions even on the batch scheduler:
+        # rows accept ragged prefix lengths per round, so the group cache is
+        # per-slot (pos (B,)) and the decode step is the masked verify step
+        decode_fn = jax.jit(mk_verify(), donate_argnums=(2,))
+        decode_faulted = {
+            kind: jax.jit(mk_verify(act_fault=val), donate_argnums=(2,))
+            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
+            if kind in plan.events
+        }
+        drafter = draft_lib.make_drafter("ngram")
+    else:
+        decode_fn = jax.jit(mk_serve(), donate_argnums=(2,))
+        decode_faulted = {
+            kind: jax.jit(mk_serve(act_fault=val), donate_argnums=(2,))
+            for kind, val in (("nan", float("nan")), ("inf", float("inf")))
+            if kind in plan.events
+        }
 
     pending = collections.deque(enumerate(prompts))
     stats = _new_stats(nreq)
@@ -1177,8 +1303,9 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         covering prompt + first decode write; padding (and later, finished)
         rows route every access to the trash page."""
         if not paged:
-            return (tf.init_cache(cfg, batch, cache_len, enc_frames=enc,
-                                  per_slot=spec > 0), None, None)
+            return (put_group(tf.init_cache(cfg, batch, cache_len,
+                                            enc_frames=enc,
+                                            per_slot=spec > 0)), None, None)
         cache = tf.init_cache(cfg, batch, cache_len, enc_frames=enc,
                               per_slot=spec > 0,
                               page_size=page_size, num_pages=num_pages)
@@ -1192,7 +1319,7 @@ def _serve_batch(cfg, prompts, gen_lens, batch, seed, eos, quantize="none",
         stats["pages_live"] = max(stats["pages_live"], galloc.pages_live())
         stats["paged_capacity_multiplier"] = max(
             stats["paged_capacity_multiplier"], galloc.capacity_multiplier())
-        return cache, galloc, row_pages
+        return put_group(cache), galloc, row_pages
 
     # compile outside the timed region, mirroring the continuous scheduler
     warm_in = {"tokens": jnp.zeros((batch, prompt_len), jnp.int32)}
@@ -1474,6 +1601,14 @@ def main():
                          "window — projections become skinny GEMMs sharing "
                          "one weight stream.  Emitted tokens are "
                          "bit-identical to --speculate 0 (0 = off)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard attention heads, "
+                         "FFN features and KV heads over a 'model' mesh "
+                         "axis (Megatron col/row layout, packed int8 "
+                         "weight shards, one psum per layer boundary).  "
+                         "Needs --backend xla and >= N devices — emulate "
+                         "with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request wall-clock deadline, enforced at "
                          "decode-round boundaries (status 'timeout'; "
@@ -1496,7 +1631,7 @@ def main():
           deadline_ms=args.deadline_ms,
           check_invariants=args.check_invariants,
           faults=args.faults or None,
-          speculate=args.speculate or None)
+          speculate=args.speculate or None, tp=args.tp)
 
 
 if __name__ == "__main__":

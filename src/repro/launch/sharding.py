@@ -249,3 +249,103 @@ def to_shardings(spec_tree, mesh):
         spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# --------------------------------------------------------------------------
+# Tensor-parallel serving specs (ISSUE 10)
+# --------------------------------------------------------------------------
+#
+# `serve --tp N` uses a 1-D ("model",) mesh and the Megatron serve layout:
+# column-parallel up-projections (each member owns a contiguous slice of
+# heads / FFN features — per-member math is a bitwise slice of the
+# single-device op, zero collectives), row-parallel down-projections
+# (contraction sharded -> partial products + ONE psum per layer boundary,
+# `distributed.row_parallel_fused`).  Packed weights shard with their scale
+# grids in lockstep (`quant.align_blocks_for_sharding` first, so the same
+# PartitionSpec applies to values and scales and every local shard is a
+# self-consistent QuantizedTensor).
+
+from repro.core import quant as _quant  # noqa: E402  (serve-only helpers)
+
+TP_COL_PARALLEL = ("wq", "wk", "wv", "w_gate", "w_up")
+TP_ROW_PARALLEL = ("wo", "w_down")
+# biases of column-parallel projections shard with the features they add to;
+# row-parallel biases (b_down) apply AFTER the psum and stay replicated
+TP_COL_BIAS = ("bq", "bk", "bv", "b_gate", "b_up")
+
+
+def tp_align_params(params, tp: int):
+    """Subdivide every TP-sharded QuantizedTensor's scale grid at the shard
+    boundaries (lossless) so values+scales split in lockstep under one spec.
+
+    Stored packed layout is output-major (`transpose=True`): a logical
+    (d, f) projection stores values (..., f, d), so the column-parallel
+    split of f is stored dim 0 and the row-parallel split of the
+    contraction is stored dim 1.
+    """
+    if tp <= 1:
+        return params
+
+    def fix(path, leaf):
+        if not _quant.is_quantized(leaf):
+            return leaf
+        name = _path_str(path).rsplit("/", 1)[-1]
+        if name in TP_COL_PARALLEL:
+            return _quant.align_blocks_for_sharding(leaf, tp, dim=0)
+        if name in TP_ROW_PARALLEL:
+            return _quant.align_blocks_for_sharding(leaf, tp, dim=1)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        fix, params, is_leaf=_quant.is_quantized)
+
+
+def tp_param_specs(params, cfg: ModelConfig, mesh, axis: str = "model"):
+    """PartitionSpecs for the serve params pytree under `--tp N`.
+
+    Quantized leaves get a QuantizedTensor-structured spec subtree whose
+    values and scales carry the SAME spec (valid after `tp_align_params`).
+    Everything not in the col/row tables (embeddings, norms, row-parallel
+    biases) replicates — each member computes full-width logits.
+    """
+    tp = axis_size(mesh, axis)
+
+    def spec(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        if _quant.is_quantized(leaf):
+            nd = leaf.values.ndim
+            if name in TP_COL_PARALLEL:      # stored (..., f_out, d)
+                sp = P(*(None,) * (nd - 2), axis, None)
+            elif name in TP_ROW_PARALLEL:    # stored (..., d, k)
+                sp = P(*(None,) * (nd - 2), None, axis)
+            else:
+                sp = P(*(None,) * nd)
+            return jax.tree.map(lambda _: sp, leaf)
+        nd = len(leaf.shape)
+        if name in TP_COL_PARALLEL:          # logical (..., d, f_out)
+            return P(*(None,) * (nd - 1), axis)
+        if name in TP_ROW_PARALLEL:          # logical (..., k, d)
+            return P(*(None,) * (nd - 2), axis, None)
+        if name in TP_COL_BIAS:              # (..., f_out)
+            return P(*(None,) * (nd - 1), axis)
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(
+        spec, params, is_leaf=_quant.is_quantized)
+
+
+def tp_cache_specs(cache, axis: str = "model"):
+    """PartitionSpecs for a serve cache pytree under `--tp N`: KV heads (and
+    their scale grids) shard over the model axis — dim -2 in both the dense
+    (L, B, S, kv, hd) and paged-pool (L, P, ps, kv, hd) layouts — everything
+    else (positions, page tables, free lists) replicates."""
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        name = p.rsplit("/", 1)[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "k_scale", "v_scale") and nd >= 4:
+            return P(*(None,) * (nd - 2), axis, None)
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -167,3 +167,91 @@ def make_eval_step(cfg: ModelConfig):
         return tf.lm_loss(params, batch, cfg)
 
     return eval_step
+
+
+# --------------------------------------------------------------------------
+# Tensor-parallel serving steps (ISSUE 10)
+# --------------------------------------------------------------------------
+#
+# One shard_map wraps each single-device step builder above.  Inside it the
+# model runs with a LOCAL config (n_heads/n_kv/d_ff divided by tp): the
+# column-parallel projections then produce exactly this member's contiguous
+# slice of heads / FFN features with zero code changes (their per-member
+# math is a bitwise slice of the single-device op), and the two row-parallel
+# boundaries per layer route through `distributed.row_parallel_fused` (one
+# psum each — the only collectives in the step).  Tokens/logits come back
+# replicated, so the serving drivers see the same (token, cache) contract.
+
+import dataclasses  # noqa: E402
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+from jax.experimental.shard_map import shard_map  # noqa: E402
+
+from repro.core import distributed  # noqa: E402
+from repro.launch.mesh import make_test_mesh  # noqa: E402
+
+TP_AXIS = "model"
+
+
+def tp_mesh(tp: int):
+    """1-D ("model",) mesh over the first `tp` host devices."""
+    return make_test_mesh((tp,), (TP_AXIS,))
+
+
+def tp_local_config(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """The per-member view of the model: heads, KV heads and FFN width
+    divided by tp (d_model stays global — the residual stream is replicated
+    between the per-layer psums)."""
+    for field, val in (("n_heads", cfg.n_heads), ("n_kv", cfg.n_kv),
+                      ("d_ff", cfg.d_ff)):
+        if val % tp:
+            raise ValueError(f"--tp {tp} must divide {field}={val}")
+    return dataclasses.replace(
+        cfg, n_heads=cfg.n_heads // tp, n_kv=cfg.n_kv // tp,
+        d_ff=cfg.d_ff // tp)
+
+
+def _tp_wrap(build, cfg: ModelConfig, mesh, in_specs, out_specs):
+    """shard_map a step builder; the body traces under `tp_serving` so
+    models/layers.py routes row-parallel boundaries through the collective
+    path (and the routing log records which kernel each one took)."""
+    p = mesh.shape[TP_AXIS]
+
+    def wrapped(*argv):
+        with distributed.tp_serving(TP_AXIS, p):
+            fn = build(tp_local_config(cfg, p))
+            return fn(*argv)
+
+    return shard_map(wrapped, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def make_tp_prefill_step(cfg: ModelConfig, mesh, pspecs, cspecs):
+    """(params, batch, cache) -> (next_tok, cache); batch dict replicated
+    (P() broadcasts as a pytree prefix), params/cache per the TP specs."""
+    return _tp_wrap(make_prefill_step, cfg, mesh,
+                    in_specs=(pspecs, P(), cspecs),
+                    out_specs=(P(), cspecs))
+
+
+def make_tp_serve_step(cfg: ModelConfig, mesh, pspecs, cspecs, act_fault=None):
+    build = functools.partial(make_serve_step, act_fault=act_fault)
+    return _tp_wrap(build, cfg, mesh,
+                    in_specs=(pspecs, P(), cspecs),
+                    out_specs=(P(), cspecs))
+
+
+def make_tp_decode_step_slots(cfg: ModelConfig, mesh, pspecs, cspecs,
+                              act_fault=None):
+    build = functools.partial(make_decode_step_slots, act_fault=act_fault)
+    return _tp_wrap(build, cfg, mesh,
+                    in_specs=(pspecs, P(), cspecs, P()),
+                    out_specs=(P(), cspecs))
+
+
+def make_tp_verify_step_slots(cfg: ModelConfig, mesh, k: int, pspecs, cspecs,
+                              act_fault=None):
+    build = functools.partial(make_verify_step_slots, k=k, act_fault=act_fault)
+    return _tp_wrap(build, cfg, mesh,
+                    in_specs=(pspecs, P(), cspecs, P()),
+                    out_specs=(P(), P(), cspecs))

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import blas, quant
+from repro.core import blas, distributed, quant
 from repro.core.act_sharding import constrain
 
 
@@ -661,10 +661,16 @@ def attention_layer(
             q_offset=q_offset, groups=groups, full_scores=cfg.full_scores,
         )
     # residual (the block's skip connection) fuses into the output
-    # projection's flush: attn-out + residual is one HBM write
-    out = blas.matmul_fused(
-        out.reshape(b, t, h * hd), params["wo"], residual=residual
-    )
+    # projection's flush: attn-out + residual is one HBM write.  Under TP
+    # serving this is the attention layer boundary: local heads contract
+    # against the wo shard and ONE psum reduces across members, with the
+    # residual added after the reduction.
+    out = out.reshape(b, t, h * hd)
+    if distributed.tp_active():
+        out = distributed.row_parallel_fused(out, params["wo"],
+                                             residual=residual)
+    else:
+        out = blas.matmul_fused(out, params["wo"], residual=residual)
     return out, new_cache
 
 
@@ -709,12 +715,21 @@ def mlp(params: dict, x: jnp.ndarray, kind: str = "swiglu",
             x, params["w_gate"], w2=params["w_up"], activation=act
         )
         mid = constrain(mid, "dp", None, "tp")
+        # TP serving: local FFN slice -> row-parallel down projection, the
+        # MLP layer boundary's single psum (residual post-reduction)
+        if distributed.tp_active():
+            return distributed.row_parallel_fused(mid, params["w_down"],
+                                                  residual=residual)
         return blas.matmul_fused(mid, params["w_down"], residual=residual)
     # plain gelu MLP (whisper-style, with bias): bias+gelu fuse into the up
     # projection, bias+residual into the down projection
     hdn = blas.matmul_fused(
         x, params["w_up"], bias=params.get("b_up"), activation="gelu"
     )
+    if distributed.tp_active():
+        return distributed.row_parallel_fused(
+            hdn, params["w_down"], bias=params.get("b_down"),
+            residual=residual)
     return blas.matmul_fused(
         hdn, params["w_down"], bias=params.get("b_down"), residual=residual
     )

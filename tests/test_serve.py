@@ -452,3 +452,98 @@ def test_prefill_chunk_requires_continuous_scheduler():
     with pytest.raises(ValueError, match=">= 1"):
         serve(ARCH, "smoke", requests=2, batch=2, prompt_len=8, gen=2,
               verbose=False, scheduler="continuous", prefill_chunk=0)
+
+
+# --------------------------------------------------------------------------
+# Tensor-parallel serving (--tp 2): token parity + packed-path routing spy
+# --------------------------------------------------------------------------
+#
+# jax locks the device count at first init, so the TP cells run in
+# subprocesses with a FORCED 2-device host platform.  The contract is
+# greedy-token IDENTITY: sharding the packed weights, KV heads and page
+# pools across the mesh changes where bytes live and what crosses the wire,
+# never which token argmax wins.  (The int8 cells are bitwise by
+# construction — integer psum is exact; the fp cells pin that psum
+# reassociation never crosses an argmax boundary on this grid.)
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+_TP_CELLS = """
+import itertools, os
+import numpy as np
+from repro.core import distributed as D
+from repro.launch.serve import serve
+from repro.models.registry import get_config
+
+SCHED = {sched!r}
+cfg = get_config("stablelm-1.6b", "smoke")
+rng = np.random.default_rng(7)
+prompts = [rng.integers(3, cfg.vocab, size=(5,), dtype=np.int32)
+           for _ in range(3)]
+gen_lens = [4, 6, 5]
+
+# paged/speculate are parity-preserving at tp=1 (pinned elsewhere), so one
+# reference per (quantize, kv_cache) serves the whole composed sub-grid —
+# which also makes every tp=2 composed cell answer to the PLAIN tp=1 run
+refs = {{}}
+for quantize, kv, page, spec in itertools.product(
+        ("none", "int8"), ("model", "int8"), (None, 4), (None, 4)):
+    if (quantize, kv) not in refs:
+        refs[(quantize, kv)] = serve(
+            "stablelm-1.6b", "smoke", batch=2, prompts=prompts,
+            gen_lens=gen_lens, eos=-1, verbose=False, scheduler=SCHED,
+            quantize=quantize, kv_cache=kv)["outputs"]
+    D.clear_tp_routes()
+    got = serve("stablelm-1.6b", "smoke", batch=2, prompts=prompts,
+                gen_lens=gen_lens, eos=-1, verbose=False, scheduler=SCHED,
+                quantize=quantize, kv_cache=kv, kv_page_size=page,
+                speculate=spec, tp=2)
+    cell = (quantize, kv, page, spec)
+    assert got["tp"] == 2, got
+    assert got["completed"] == 3, (cell, got)
+    assert got["outputs"] == refs[(quantize, kv)], (cell, got["outputs"],
+                                                    refs[(quantize, kv)])
+    routes = D.tp_routes()
+    assert routes, cell
+    if quantize == "int8":
+        # the routing spy: decode-shaped projections through the boundary
+        # MUST take the collective packed-int8 path (int32 partials + one
+        # integer psum), and must NEVER fall back to dequant-then-matmul
+        assert any(k == "packed_int8" and ds for k, ds in routes), (cell, routes)
+        assert not any(k == "dequant" and ds for k, ds in routes), (cell, routes)
+    else:
+        assert any(k == "dense" for k, ds in routes), (cell, routes)
+    print("cell OK", SCHED, cell, flush=True)
+print("ALL CELLS OK", SCHED)
+"""
+
+
+def _run_tp_cells(scheduler, timeout=1200):
+    import os
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = _SRC
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_TP_CELLS.format(sched=scheduler))],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert res.returncode == 0, (
+        f"STDOUT:\n{res.stdout[-4000:]}\nSTDERR:\n{res.stderr[-4000:]}")
+    assert f"ALL CELLS OK {scheduler}" in res.stdout
+
+
+def test_tp2_token_parity_continuous_composed_cells():
+    """--tp 2 greedy tokens == 1-device on every composed cell:
+    {fp, int8 weights} x {dense, int8 KV} x {dense, paged} x {spec off, 4},
+    continuous scheduler, with the packed-int8 routing spy."""
+    _run_tp_cells("continuous")
+
+
+def test_tp2_token_parity_batch_composed_cells():
+    """Same composed grid under the batch-at-a-time scheduler."""
+    _run_tp_cells("batch")
